@@ -1,0 +1,98 @@
+"""ArcLight engine + serving benchmarks (end-to-end on CPU).
+
+  engine.*  — the faithful graph-builder engine: TP vs non-TP MLP
+              execution, barrier counts, per-node memory split
+  serving.* — the decoding frontend on a tiny dense model: decode and
+              prefill throughput (paper §4's measurement, laptop scale)
+  syncab.*  — collective-op counts of Sync A vs Sync B TP blocks
+              (jaxpr-level; the TPU analogue of Fig 9)
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def engine_rows() -> List[Row]:
+    from repro.core import (Engine, EngineConfig, build_tp_mlp_graph,
+                            split_mlp_weights)
+    d, f, t = 256, 1024, 8
+    rng = np.random.default_rng(0)
+    w = {"w_gate": (rng.normal(size=(f, d)) * 0.05).astype(np.float32),
+         "w_up": (rng.normal(size=(f, d)) * 0.05).astype(np.float32),
+         "w_down": (rng.normal(size=(d, f)) * 0.05).astype(np.float32)}
+    x = rng.normal(size=(d, t)).astype(np.float32)
+    rows: List[Row] = []
+    for n in (1, 4):
+        eng = Engine(EngineConfig(n_nodes=n, n_threads=8))
+        _, zout = build_tp_mlp_graph(eng, d, f, t)
+        weights = dict(w) if n == 1 else split_mlp_weights(w, n)
+        t0 = time.perf_counter()
+        rep = eng.execute({"x": x}, weights)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"engine.tp{n}.exec", us,
+                     f"nodes={rep.node_count},barriers={rep.barrier_count}"))
+        per_node = rep.per_node_bytes
+        rows.append((f"engine.tp{n}.mem_nodes", us,
+                     f"{len([v for v in per_node.values() if v])}"))
+    return rows
+
+
+def serving_rows() -> List[Row]:
+    from repro.data.pipeline import PackedLMDataset
+    from repro.models import ModelConfig, build_model
+    from repro.serving.engine import Request, ServingEngine, \
+        throughput_report
+    from repro.serving.sampler import SamplingParams
+
+    cfg = ModelConfig(name="bench-tiny", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_len=128)
+    reqs = [Request(uid=i, prompt=list(range(1, 17)),
+                    sampling=SamplingParams(max_new_tokens=16))
+            for i in range(8)]
+    t0 = time.perf_counter()
+    comps = eng.generate(reqs, max_batch=8)
+    us = (time.perf_counter() - t0) * 1e6
+    rep = throughput_report(comps)
+    return [
+        ("serving.decode_toks_per_s", us, f"{rep['decode_tok_per_s']:.1f}"),
+        ("serving.prefill_toks_per_s", us,
+         f"{rep['prefill_tok_per_s']:.1f}"),
+    ]
+
+
+def syncab_rows() -> List[Row]:
+    """Collective-op counts: Sync A inserts one all-gather per op."""
+    from repro.core import tp
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    d, f, t = 32, 64, 4
+    params = {k: (rng.normal(size=s) * 0.1).astype(np.float32)
+              for k, s in [("w_gate", (d, f)), ("w_up", (d, f)),
+                           ("w_down", (f, d))]}
+    x = rng.normal(size=(t, d)).astype(np.float32)
+    rows: List[Row] = []
+    for mode in ("sync_a", "sync_b"):
+        t0 = time.perf_counter()
+        blk = tp.make_tp_block(mesh, "mlp", sync_mode=mode)
+        counts = tp.collective_ops_in(blk, params, x)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"syncab.mlp.{mode}.collectives", us,
+                     f"{sum(counts.values())}:{counts}"))
+    return rows
+
+
+def all_rows() -> List[Row]:
+    return engine_rows() + serving_rows() + syncab_rows()

@@ -1,0 +1,98 @@
+"""Kernel micro-benchmarks: Q4_0 GEMM + decode attention vs refs.
+
+On this CPU container the Pallas kernels run in interpret mode (slow,
+correctness-only), so wall-times compare the jnp reference paths and
+report the kernels' interpret-mode overhead separately; the derived
+column carries the analytic TPU-side expectation (bytes moved /
+HBM bandwidth) for the same shape.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import gqa_decode_attention, q4_matmul
+from repro.launch.mesh import HBM_BW
+from repro.quant.q4_0 import quantize, quantized_bytes
+
+Row = Tuple[str, float, str]
+
+
+def _time_it(fn, *args, iters=5) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def q4_gemm_rows() -> List[Row]:
+    rows: List[Row] = []
+    for (M, K, N) in [(1, 2048, 2048), (8, 2048, 2048), (1, 4096, 11008)]:
+        w = (np.random.default_rng(0).normal(size=(K, N)) * 0.1
+             ).astype(np.float32)
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(M, K)),
+                        jnp.float32)
+        p, s = quantize(w)
+        us = _time_it(lambda a, b, c: q4_matmul(a, b, c, impl="ref"),
+                      x, p, s)
+        tpu_us = quantized_bytes((K, N)) / HBM_BW * 1e6
+        rows.append((f"q4_gemm.ref.M{M}K{K}N{N}", us,
+                     f"tpu_hbm_bound_us={tpu_us:.1f}"))
+    return rows
+
+
+def decode_attn_rows() -> List[Row]:
+    rows: List[Row] = []
+    for (B, S, Hq, Hkv, D) in [(1, 4096, 32, 8, 128), (8, 2048, 16, 8, 128)]:
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(B, 1, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+        us = _time_it(
+            lambda a, b, c: gqa_decode_attention(a, b, c, S, impl="ref"),
+            q, k, v)
+        cache_bytes = 2 * B * S * Hkv * D * 2  # bf16 k+v on TPU
+        rows.append((f"decode_attn.ref.B{B}S{S}", us,
+                     f"tpu_hbm_bound_us={cache_bytes / HBM_BW * 1e6:.1f}"))
+    return rows
+
+
+def interpret_overhead_rows() -> List[Row]:
+    """Pallas interpret-mode sanity timing on one small shape."""
+    from repro.kernels.q4_gemm import q4_gemm
+    w = (np.random.default_rng(0).normal(size=(256, 256)) * 0.1
+         ).astype(np.float32)
+    p, s = quantize(w)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 256)),
+                    jnp.float32)
+    t0 = time.perf_counter()
+    out = q4_gemm(x, p, s, block_n=128, block_k=128, interpret=True)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("q4_gemm.pallas_interpret.M1K256N256", us,
+             "correctness-mode")]
+
+
+def rglru_rows() -> List[Row]:
+    from repro.kernels.ops import rglru_linear_scan
+    rng = np.random.default_rng(0)
+    B, T, W = 1, 2048, 2560          # recurrentgemma-2b prefill shape
+    a = jnp.asarray(rng.uniform(0.9, 0.999, (B, T, W)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(B, T, W)) * 0.1, jnp.float32)
+    us = _time_it(lambda x, y: rglru_linear_scan(x, y, impl="ref"), a, u)
+    hbm_us = 3 * B * T * W * 4 / HBM_BW * 1e6   # read a,u + write h
+    return [(f"rglru_scan.ref.B{B}T{T}W{W}", us,
+             f"tpu_hbm_bound_us={hbm_us:.1f}")]
+
+
+def all_rows() -> List[Row]:
+    return (q4_gemm_rows() + decode_attn_rows() + rglru_rows()
+            + interpret_overhead_rows())

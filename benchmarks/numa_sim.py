@@ -1,0 +1,104 @@
+"""Paper-figure reproductions via the calibrated NUMA cost model.
+
+One function per paper table/figure:
+  table1   — cross-node bandwidth matrix (Table 1)
+  fig10    — single-NUMA-node decode scaling
+  fig11    — multi-node decode: llama.cpp-distribute vs ArcLight-TP
+  fig9     — Sync A vs Sync B makespans (thread-group schedules)
+  fig12_13 — prompt-300 decode + prefill
+  headline — the "up to 46%" and "+5 tok/s" claims
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.numa import (KUNPENG_920_4NODE, QWEN3_4B,
+                             async_gain_tokens_per_s, fig10_single_node,
+                             fig11_multi_node, fig12_13_long_prompt,
+                             headline_gain)
+from repro.core.threads import SyncSchedule
+
+
+Row = Tuple[str, float, str]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def table1() -> List[Row]:
+    m, us = _timed(KUNPENG_920_4NODE.bandwidth_matrix)
+    local = float(np.diag(m).mean())
+    remote = float(m[~np.eye(4, dtype=bool)].mean())
+    return [
+        ("table1.local_gbs", us, f"{local:.1f}"),
+        ("table1.remote_gbs", us, f"{remote:.1f}"),
+        ("table1.local_over_remote", us, f"{local / remote:.2f}"),
+    ]
+
+
+def fig10() -> List[Row]:
+    f, us = _timed(fig10_single_node)
+    rows: List[Row] = []
+    for sys in ("llama.cpp", "arclight"):
+        for t, v in zip(f["threads"], f[sys]):
+            rows.append((f"fig10.{sys}.t{t}", us, f"{v:.1f}"))
+    return rows
+
+
+def fig11() -> List[Row]:
+    f, us = _timed(fig11_multi_node)
+    rows: List[Row] = []
+    for sys in ("llama.cpp", "arclight_tp", "arclight_tp_sync_a"):
+        for n in (2, 4):
+            rows.append((f"fig11.{sys}.n{n}.max_toks",
+                         us, f"{max(f[sys][n]):.1f}"))
+    return rows
+
+
+def fig9() -> List[Row]:
+    # representative skewed per-group op durations (ms)
+    rng = np.random.default_rng(0)
+    d = np.abs(rng.normal(1.0, 0.3, size=(4, 14)))
+    a, us1 = _timed(lambda: SyncSchedule.sync_a(d, barrier_cost=0.01))
+    b, us2 = _timed(lambda: SyncSchedule.sync_b(d, barrier_cost=0.01))
+    return [
+        ("fig9.sync_a.makespan_ms", us1, f"{a.makespan:.3f}"),
+        ("fig9.sync_b.makespan_ms", us2, f"{b.makespan:.3f}"),
+        ("fig9.async_speedup", us1 + us2, f"{a.makespan / b.makespan:.3f}"),
+        ("fig9.sync_a.idle_ms", us1, f"{a.idle_time:.3f}"),
+        ("fig9.sync_b.idle_ms", us2, f"{b.idle_time:.3f}"),
+    ]
+
+
+def fig12_13() -> List[Row]:
+    f, us = _timed(fig12_13_long_prompt)
+    rows: List[Row] = []
+    for phase in ("decode", "prefill"):
+        for sys in ("llama.cpp", "arclight_tp"):
+            for n in (2, 4):
+                rows.append((f"fig12_13.{phase}.{sys}.n{n}", us,
+                             f"{f[phase][sys][n]:.1f}"))
+    return rows
+
+
+def headline() -> List[Row]:
+    g, us1 = _timed(headline_gain)
+    a, us2 = _timed(async_gain_tokens_per_s)
+    return [
+        ("headline.tp_gain_pct (paper: up to 46%)", us1, f"{100 * g:.1f}"),
+        ("headline.async_gain_toks (paper: ~5)", us2, f"{a:.1f}"),
+    ]
+
+
+def all_rows() -> List[Row]:
+    rows: List[Row] = []
+    for fn in (table1, fig10, fig11, fig9, fig12_13, headline):
+        rows.extend(fn())
+    return rows

@@ -1,0 +1,38 @@
+"""Roofline summary rows from the saved dry-run sweeps.
+
+Reads ``experiments/dryrun_single_pod.json`` (written by
+``python -m repro.launch.dryrun --all``) and emits one row per
+(arch × shape) with the dominant term — the benchmark counterpart of
+EXPERIMENTS.md §Roofline.  Skipped gracefully when the sweep artifact
+is absent.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "dryrun_single_pod.json")
+
+
+def all_rows() -> List[Row]:
+    if not os.path.exists(_PATH):
+        return [("roofline.sweep", 0.0, "missing (run repro.launch.dryrun)")]
+    with open(_PATH) as f:
+        data = json.load(f)
+    rows: List[Row] = []
+    for r in data.get("results", []):
+        us = r.get("compile_s", 0.0) * 1e6
+        dom = r["dominant"]
+        t_dom = {"compute": r["t_compute"], "memory": r["t_memory"],
+                 "collective": r["t_collective"]}[dom]
+        rows.append((f"roofline.{r['arch']}.{r['shape']}", us,
+                     f"dom={dom}:{t_dom:.3e}s,useful="
+                     f"{r['useful_flops_ratio']:.2f}"))
+    for f_ in data.get("failures", []):
+        rows.append((f"roofline.{f_['arch']}.{f_['shape']}", 0.0, "FAILED"))
+    return rows

@@ -1,0 +1,29 @@
+"""Benchmark harness (deliverable d) — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  numa_sim       Table 1, Figs 10/11/9/12/13, headline claims
+  engine_bench   ArcLight engine + serving frontend + Sync A/B
+  kernels_bench  Q4_0 GEMM + decode attention kernels
+  roofline_bench per-(arch x shape) dominant roofline terms
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import engine_bench, kernels_bench, numa_sim, roofline_bench
+    print("name,us_per_call,derived")
+    for mod in (numa_sim, engine_bench, kernels_bench, roofline_bench):
+        try:
+            for name, us, derived in mod.all_rows():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001 — keep other sections alive
+            traceback.print_exc()
+            print(f"{mod.__name__},0.0,SECTION-FAILED", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""NUMA cost-model explorer: sweep placements/hardware (paper §3-§4).
+
+Reproduces the paper's figures and then goes beyond them: what happens
+with 8 NUMA nodes? With HBM-class local bandwidth? With a bigger model?
+The model is mechanistic, so these extrapolations are napkin math made
+executable — the same numbers drive EXPERIMENTS.md.
+
+Run:  PYTHONPATH=src python examples/numa_sweep.py
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.numa import (KUNPENG_920_4NODE, QWEN3_4B, ModelTraffic,
+                             NumaTopology, decode_throughput,
+                             headline_gain)
+
+
+def show_curve(label, topo, model, nodes, policy, sync="sync_b"):
+    per_node = (6, 12, 24, 48)
+    vals = [decode_throughput(model, topo, t * nodes, nodes, policy,
+                              sync_mode=sync).tokens_per_s
+            for t in per_node]
+    print(f"  {label:42s} {[round(v, 1) for v in vals]} tok/s")
+
+
+def main() -> None:
+    topo = KUNPENG_920_4NODE
+    print("== paper platform (4 x 48 Kunpeng-920, Table 1 bandwidths)")
+    show_curve("llama.cpp --numa distribute (4 nodes)", topo, QWEN3_4B, 4,
+               "llama_uma_distribute")
+    show_curve("ArcLight cross-NUMA TP      (4 nodes)", topo, QWEN3_4B, 4,
+               "arclight_numa_tp")
+    show_curve("ArcLight TP, Sync A         (4 nodes)", topo, QWEN3_4B, 4,
+               "arclight_numa_tp", sync="sync_a")
+    print(f"  headline gain: {100 * headline_gain():.1f}%")
+
+    print("\n== beyond the paper: 8 NUMA nodes (same per-node hw)")
+    topo8 = dataclasses.replace(topo, n_nodes=8)
+    show_curve("llama.cpp distribute (8 nodes)", topo8, QWEN3_4B, 8,
+               "llama_uma_distribute")
+    show_curve("ArcLight TP          (8 nodes)", topo8, QWEN3_4B, 8,
+               "arclight_numa_tp")
+    g8 = (decode_throughput(QWEN3_4B, topo8, 384, 8,
+                            "arclight_numa_tp").tokens_per_s
+          / decode_throughput(QWEN3_4B, topo8, 384, 8,
+                              "llama_uma_distribute").tokens_per_s - 1)
+    print(f"  TP gain at 8 nodes: {100 * g8:.1f}% "
+          f"(remote traffic grows with (N-1)/N -> gain rises)")
+
+    print("\n== beyond the paper: bigger model (Qwen2-72B class, Q4_0)")
+    big = ModelTraffic(name="qwen2-72b", n_layers=80, d_model=8192,
+                       d_ff=29568, n_heads=64, n_kv_heads=8,
+                       vocab=152064)
+    show_curve("ArcLight TP (4 nodes)", topo, big, 4, "arclight_numa_tp")
+    print(f"  weight bytes: {big.weight_bytes / 1e9:.1f} GB -> decode is"
+          " purely bandwidth-bound; TP gain tracks the remote/local gap")
+
+    print("\n== sensitivity: what if remote bandwidth doubled?")
+    fast = dataclasses.replace(topo, remote_bw=48.0)
+    for t, label in [(topo, "paper remote 24 GB/s"),
+                     (fast, "2x remote 48 GB/s")]:
+        g = (decode_throughput(QWEN3_4B, t, 192, 4,
+                               "arclight_numa_tp").tokens_per_s
+             / decode_throughput(QWEN3_4B, t, 192, 4,
+                                 "llama_uma_distribute").tokens_per_s - 1)
+        print(f"  {label:24s} TP gain {100 * g:5.1f}%")
+    print("  -> the technique's win shrinks as the NUMA gap closes, "
+          "exactly the paper's premise")
+
+
+if __name__ == "__main__":
+    main()

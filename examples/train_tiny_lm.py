@@ -1,0 +1,88 @@
+"""End-to-end training driver (deliverable b).
+
+Trains a GPT-style dense LM on the synthetic packed corpus with the
+full production pipeline: data pipeline -> model zoo -> AdamW + cosine
+-> checkpointing -> eval.  The default config is a genuine ~100M-param
+model trained for a few hundred steps; on this CPU container that takes
+a while, so ``--preset small`` (the default) runs a reduced variant
+that finishes in minutes and ``--preset 100m`` selects the full one
+(identical code path).
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--preset 100m]
+      [--steps N]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import PackedLMDataset
+from repro.models import ModelConfig, build_model
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.loop import make_eval_step, train
+from repro.training.optimizer import AdamWConfig
+
+
+PRESETS = {
+    # ~100M params: 12L x 768 (GPT-2 small shape), byte-level vocab
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                 d_ff=3072, seq_len=512, batch=16, steps=300),
+    "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                  d_ff=1024, seq_len=128, batch=8, steps=120),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="small")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_tiny_lm")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    steps = args.steps or p["steps"]
+
+    cfg = ModelConfig(
+        name=f"tiny-lm-{args.preset}", arch_type="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"],
+        n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"],
+        vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    print(f"model: {cfg.name}  params={cfg.param_count() / 1e6:.1f}M")
+
+    params = model.init(jax.random.PRNGKey(0))
+    ds = PackedLMDataset(seq_len=p["seq_len"], n_docs=4000,
+                         vocab_size=cfg.vocab_size)
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=max(steps // 20, 5),
+                          total_steps=steps)
+
+    def log(step, m):
+        print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}  "
+              f"{m['elapsed_s']:.1f}s")
+
+    params, opt_state, hist = train(model, params,
+                                    ds.batches(p["batch"]), opt_cfg,
+                                    steps=steps, log_every=10,
+                                    callback=log)
+
+    path = save_checkpoint(args.ckpt, steps, {"params": params})
+    print(f"checkpoint: {path}")
+
+    # eval on held-out rows (different sampling seed)
+    eval_step = jax.jit(make_eval_step(model))
+    batches = ds.batches(p["batch"], seed=999)
+    losses = [float(eval_step(params, next(batches))["loss"])
+              for _ in range(5)]
+    print(f"eval loss: {sum(losses) / len(losses):.4f} "
+          f"(train started at {hist[0]['loss']:.3f})")
+
+    # restore check
+    step, out = load_checkpoint(args.ckpt, {"params": params})
+    print(f"restored step {step}; "
+          f"loss drop {hist[0]['loss'] - hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Assigned-architecture registry (--arch <id>) + input shapes."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+from .shapes import SHAPES, InputShape
+
+from .gemma3_1b import CONFIG as _gemma3_1b
+from .granite_3_8b import CONFIG as _granite_3_8b
+from .qwen3_1p7b import CONFIG as _qwen3_1p7b
+from .llama32_vision_11b import CONFIG as _llama32_vision_11b
+from .whisper_medium import CONFIG as _whisper_medium
+from .phi35_moe import CONFIG as _phi35_moe
+from .grok1 import CONFIG as _grok1
+from .mamba2_370m import CONFIG as _mamba2_370m
+from .qwen2_72b import CONFIG as _qwen2_72b
+from .recurrentgemma_2b import CONFIG as _recurrentgemma_2b
+
+ARCHS: Dict[str, ModelConfig] = {
+    "gemma3-1b": _gemma3_1b,
+    "granite-3-8b": _granite_3_8b,
+    "qwen3-1.7b": _qwen3_1p7b,
+    "llama-3.2-vision-11b": _llama32_vision_11b,
+    "whisper-medium": _whisper_medium,
+    "phi3.5-moe-42b-a6.6b": _phi35_moe,
+    "grok-1-314b": _grok1,
+    "mamba2-370m": _mamba2_370m,
+    "qwen2-72b": _qwen2_72b,
+    "recurrentgemma-2b": _recurrentgemma_2b,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from "
+                       f"{sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)
+
+
+__all__ = ["ARCHS", "SHAPES", "InputShape", "get_config", "list_archs"]

@@ -1,0 +1,13 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+- ``q4_gemm``          Q4_0 dequant+matmul (the paper's NEON GEMM,
+                       re-blocked for VMEM/MXU)
+- ``decode_attention`` flash-decoding over the KV cache
+- ``rglru_scan``       RG-LRU linear-recurrence scan (hybrid archs)
+- ``ops``              jit'd wrappers (kernel on TPU, interpret/ref on CPU)
+- ``ref``              pure-jnp oracles
+"""
+
+from .ops import gqa_decode_attention, q4_matmul, rglru_linear_scan
+
+__all__ = ["gqa_decode_attention", "q4_matmul", "rglru_linear_scan"]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: flash-decoding attention (one query token).
+
+The decode hot-spot: a single query attends over a long KV cache —
+pure HBM bandwidth (read every cache byte once), exactly the workload
+ArcLight's NUMA placement targets.  TPU adaptation: the cache streams
+HBM→VMEM in (BS, D) chunks along the sequence grid axis; online
+softmax state (m, l, acc) lives in VMEM scratch across grid steps;
+the final grid step normalises and writes out.
+
+Shapes (GQA folded outside the kernel by the ops wrapper):
+    q   (B, H, G, D)   one token's queries, G = Hq // Hkv
+    k,v (B, S, H, D)   cache (H = kv heads)
+    kv_len scalar      number of valid cache slots (rest masked)
+
+Grid: (B, H, S/BS) — the sequence axis is innermost so scratch
+accumulates per (batch, head).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, *,
+                        block_s: int, n_s: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (BS, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (BS, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G,BS)
+    kv_len = len_ref[0]
+    kpos = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_s), 1)
+    s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # (G, BS)
+    alpha = jnp.exp(m_prev - m_new)                # (G, 1)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = acc_ref[...] / l
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len, *, block_s: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q (B,H,G,D) × cache k,v (B,S,H,D) -> out (B,H,G,D) f32."""
+    B, H, G, D = q.shape
+    _, S, _, _ = k.shape
+    block_s = min(block_s, S)
+    if S % block_s:
+        raise ValueError(f"S={S} not divisible by block_s={block_s}")
+    n_s = S // block_s
+    scale = 1.0 / math.sqrt(D)
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_attn_kernel, block_s=block_s,
+                               n_s=n_s, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                     # kv_len in SMEM
+        grid=(B, H, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s, _: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, h, s, _: (b, s, h, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, h, s, _: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s, _: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, G, D), jnp.float32),
+        interpret=interpret,
+    )(kv_len, q, k, v)

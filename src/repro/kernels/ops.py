@@ -1,0 +1,64 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the wrappers call the compiled kernels; on CPU (this container)
+they run the kernels in interpret mode for correctness work, or fall
+back to the jnp oracle for speed (``impl="ref"``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .decode_attention import decode_attention as _decode_attention_kernel
+from .q4_gemm import q4_gemm as _q4_gemm_kernel
+from .rglru_scan import rglru_scan_kernel as _rglru_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_k"))
+def q4_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array, *,
+              impl: str = "auto", block_n: int = 256,
+              block_k: int = 256) -> jax.Array:
+    """Quantized matmul: x (M,K) @ W_q4 (K,N) -> (M,N) f32."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.q4_gemm_ref(x, packed, scales)
+    return _q4_gemm_kernel(x, packed, scales, block_n=block_n,
+                           block_k=block_k, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_s"))
+def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: Any, *, impl: str = "auto",
+                         block_s: int = 512) -> jax.Array:
+    """Flash-decoding for one token with GQA.
+
+    q (B,1,Hq,D); k,v (B,S,Hkv,D) -> out (B,1,Hq,D), matching the
+    model-zoo attention contract."""
+    B, one, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qk = q.reshape(B, Hkv, G, D)
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        out = _ref.decode_attention_ref(qk, k, v, kv_len)
+    else:
+        out = _decode_attention_kernel(qk, k, v, kv_len, block_s=block_s,
+                                       interpret=not _on_tpu())
+    return out.reshape(B, 1, Hq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_t"))
+def rglru_linear_scan(a: jax.Array, u: jax.Array, h0=None, *,
+                      impl: str = "auto", block_t: int = 128) -> jax.Array:
+    """RG-LRU recurrence h[t] = a[t]*h[t-1] + u[t] over (B, T, W)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.rglru_scan_ref(a, u, h0)
+    return _rglru_scan_kernel(a, u, h0=h0, block_t=block_t,
+                              interpret=not _on_tpu())

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..quant.q4_0 import dequantize
+
+
+def q4_gemm_ref(x: jax.Array, packed: jax.Array,
+                scales: jax.Array) -> jax.Array:
+    """x (M,K) @ dequant(packed, scales) (K,N) -> (M,N) f32."""
+    w = dequantize(packed, scales, dtype=jnp.float32)
+    return x.astype(jnp.float32) @ w
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len) -> jax.Array:
+    """q (B,H,G,D) × cache k,v (B,S,H,D) -> (B,H,G,D) f32."""
+    B, H, G, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S) < jnp.asarray(kv_len)
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+
+
+def rglru_scan_ref(a: jax.Array, u: jax.Array, h0=None) -> jax.Array:
+    """Associative-scan oracle for the RG-LRU recurrence kernel."""
+    if h0 is not None:
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h

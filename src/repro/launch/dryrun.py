@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+DOC = """Multi-pod dry-run (deliverable e) — the two lines above MUST
+run before any jax import (jax locks the device count on first init).
+
+For every (architecture × input shape × mesh):
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...) \
+                      .lower(*input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from ..configs import SHAPES, list_archs
+from .mesh import CHIPS_PER_POD, make_production_mesh
+from .roofline import analyse, format_table
+from .shardings import Policy
+from .specs import build_case
+
+
+def run_case(arch: str, shape: str, *, multi_pod: bool = False,
+             policy: Optional[Policy] = None, verbose: bool = True,
+             save_hlo: Optional[str] = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else CHIPS_PER_POD
+    t0 = time.time()
+    case = build_case(arch, shape, mesh, policy=policy)
+    with mesh:
+        jitted = jax.jit(case.step_fn,
+                         in_shardings=case.in_shardings,
+                         out_shardings=case.out_shardings)
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"== {arch} x {shape} x {mesh_name} "
+              f"(compile {t_compile:.1f}s, note={case.note or '-'})")
+        print(f"   memory_analysis: {mem}")
+        print("   cost_analysis: flops={:.3e} bytes={:.3e}".format(
+            float((cost or {}).get('flops', 0)),
+            float((cost or {}).get('bytes accessed', 0))))
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    report = analyse(compiled, cfg=case.cfg, arch=arch, shape_name=shape,
+                     mesh_name=mesh_name, chips=chips, kind=case.kind,
+                     tokens=case.tokens, hlo_text=hlo)
+    report.note = case.note
+    d = report.to_dict()
+    d["compile_s"] = t_compile
+    if verbose:
+        print(f"   roofline: compute={report.t_compute:.3e}s "
+              f"memory={report.t_memory:.3e}s "
+              f"collective={report.t_collective:.3e}s "
+              f"dominant={report.dominant} "
+              f"useful={report.useful_flops_ratio:.2f}")
+        print(f"   collectives: {report.coll_breakdown}")
+    return d
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) baseline")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    policy = Policy(fsdp=not args.no_fsdp,
+                    expert_parallel=args.expert_parallel,
+                    seq_shard_cache=not args.no_seq_shard)
+
+    results = []
+    failures = []
+    if args.all:
+        pairs = [(a, s) for a in list_archs() for s in SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    for arch, shape in pairs:
+        try:
+            results.append(run_case(arch, shape, multi_pod=args.multi_pod,
+                                    policy=policy,
+                                    save_hlo=args.save_hlo))
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            traceback.print_exc()
+            failures.append({"arch": arch, "shape": shape,
+                             "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f,
+                      indent=1)
+        print(f"wrote {args.out}")
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL", f_["arch"], f_["shape"], f_["error"][:200])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""Dry-run case builder: step function + abstract inputs + shardings.
+
+``build_case(arch, shape, mesh)`` assembles, WITHOUT allocating
+anything (ShapeDtypeStruct only):
+
+    train_4k     -> train_step(params, opt_state, batch)
+    prefill_32k  -> prefill_step(params, batch, cache)
+    decode_32k   -> serve_step(params, cache, tokens, pos)
+    long_500k    -> serve_step with a seq-sharded / windowed cache
+
+plus the in/out shardings from the §3.2 partition plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..models import build_model
+from ..models.config import ModelConfig
+from ..training.loop import make_train_step
+from ..training.optimizer import AdamWConfig, AdamWState, adamw_init
+from . import shardings as shd
+from .shardings import Policy
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {"tokens": _sds((batch, seq), jnp.int32)}
+    out["labels"] = _sds((batch, seq), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = _sds((batch, cfg.n_audio_frames, cfg.d_model),
+                             cfg.dtype)
+    if cfg.cross_attn_every:
+        out["image_embeds"] = _sds((batch, cfg.n_image_tokens, cfg.d_model),
+                                   cfg.dtype)
+    return out
+
+
+def _memory_len(cfg: ModelConfig) -> int:
+    if cfg.is_encoder_decoder:
+        return cfg.n_audio_frames
+    if cfg.cross_attn_every:
+        return cfg.n_image_tokens
+    return 0
+
+
+def decode_cache_plan(cfg: ModelConfig, seq_len: int,
+                      ) -> Tuple[int, Optional[int], str]:
+    """(cache_len, window_override, note) for a decode shape."""
+    windows = [w for k, w in zip(cfg.layer_kinds,
+                                 cfg.layer_windows(seq_len))
+               if k in ("attn", "xattn")]
+    has_global = any(w == 0 for w in windows)
+    if seq_len > 65_536 and cfg.long_context == "sliding_window":
+        w = cfg.long_context_window
+        return w, w, "SW"  # flagged sliding-window variant (DESIGN.md §4)
+    if windows and not has_global:
+        return min(max(windows), seq_len), None, "native-window"
+    return seq_len, None, "native"
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    arch: str
+    shape_name: str
+    kind: str
+    tokens: int                      # tokens processed per step
+    cfg: ModelConfig
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    note: str = ""
+
+
+def _opt_shardings(params_sh, mesh: Mesh) -> AdamWState:
+    return AdamWState(step=shd.replicated(mesh), m=params_sh, v=params_sh)
+
+
+def build_case(arch: str, shape_name: str, mesh: Mesh,
+               policy: Optional[Policy] = None,
+               cfg_override: Optional[ModelConfig] = None) -> DryRunCase:
+    policy = policy or Policy()
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train" and not cfg.remat:
+        # every production-size train step needs per-layer remat
+        cfg = dataclasses.replace(cfg, remat=True)
+    if shape.kind == "prefill" and policy.head_aligned:
+        # prefill is compute-bound: replicated-attention redundancy
+        # costs more than the head-split gathers (EXPERIMENTS W1/W2)
+        policy = dataclasses.replace(policy, head_aligned=False)
+    if shape.kind != "train" and policy.fsdp:
+        # FSDP exists to shard optimizer state; for inference it only
+        # adds a per-layer weight all-gather every token (measured:
+        # 22.9 GB/step on qwen2 decode_32k) — params at bf16/16-way TP
+        # always fit without it
+        policy = dataclasses.replace(policy, fsdp=False)
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    # sharding hooks: FSDP weight-unshard per layer + activation batch pin
+    model.param_constraint = shd.make_layer_constraint(cfg, mesh, policy)
+    model.act_constraint = shd.make_activation_constraint(mesh,
+                                                          batch_size=B)
+    model.moe_hook = shd.make_moe_hook(cfg, mesh, policy, batch_size=B)
+    if policy.head_aligned and cfg.n_heads % mesh.shape.get("model", 1):
+        # replicated-attention archs: stop GSPMD re-partitioning the
+        # attention contraction over the idle model axis
+        model.attn_act_constraint = model.act_constraint
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sh = shd.params_shardings(cfg, params_shapes, mesh, policy)
+    repl = shd.replicated(mesh)
+    dp = shd.batch_shardings(cfg, {"x": _sds((B, 1), jnp.int32)}, mesh,
+                             batch_size=B)["x"].spec
+    # vocab axis of the logits shards over "model" only when divisible
+    vocab_ax = ("model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0
+                else None)
+
+    if shape.kind == "train":
+        batch = batch_specs(cfg, B, S)
+        batch_sh = shd.batch_shardings(cfg, batch, mesh, batch_size=B)
+        opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+        opt_sh = _opt_shardings(params_sh, mesh)
+        step = make_train_step(model, AdamWConfig(),
+                               microbatches=policy.microbatches)
+        metrics_sh = {k: repl for k in
+                      ("ce", "aux", "lr", "grad_norm", "loss")}
+        return DryRunCase(
+            arch=arch, shape_name=shape_name, kind="train",
+            tokens=B * S, cfg=cfg, step_fn=step,
+            args=(params_shapes, opt_shapes, batch),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, metrics_sh))
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, B, S)
+        batch.pop("labels")
+        batch_sh = shd.batch_shardings(cfg, batch, mesh, batch_size=B)
+        cache_shapes = jax.eval_shape(
+            functools.partial(model.init_cache, B, S,
+                              memory_len=_memory_len(cfg)))
+        cache_sh = shd.cache_shardings(cfg, cache_shapes, mesh, policy,
+                                       batch_size=B, long_context=False)
+        logits_sh = NamedSharding(mesh, P(dp[0] if dp else None, None,
+                                          vocab_ax))
+
+        def prefill_step(params, batch_, cache):
+            return model.prefill(params, batch_, cache)
+
+        return DryRunCase(
+            arch=arch, shape_name=shape_name, kind="prefill",
+            tokens=B * S, cfg=cfg, step_fn=prefill_step,
+            args=(params_shapes, batch, cache_shapes),
+            in_shardings=(params_sh, batch_sh, cache_sh),
+            out_shardings=(logits_sh, cache_sh))
+
+    # decode
+    cache_len, window_override, note = decode_cache_plan(cfg, S)
+    long_ctx = shape_name == "long_500k"
+    hook = shd.make_decode_attn_hook(cfg, mesh, policy, batch_size=B,
+                                     cache_len=cache_len)
+    if hook is not None:
+        model.decode_attn_hook = hook
+        note_extra = "+seqshard"
+    else:
+        note_extra = ""
+    cache_shapes = jax.eval_shape(
+        functools.partial(model.init_cache, B, S, cache_len=cache_len,
+                          memory_len=_memory_len(cfg)))
+    cache_sh = shd.cache_shardings(cfg, cache_shapes, mesh, policy,
+                                   batch_size=B, long_context=long_ctx)
+    tokens_spec = _sds((B, 1), jnp.int32)
+    tokens_sh = NamedSharding(mesh, P(dp[0] if dp else None, None))
+    logits_sh = NamedSharding(mesh, P(dp[0] if dp else None, None,
+                                      vocab_ax))
+
+    def constrain_cache(c):
+        return jax.tree.map(jax.lax.with_sharding_constraint, c, cache_sh)
+    model.cache_constraint = constrain_cache
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos,
+                                 window_override=window_override)
+
+    return DryRunCase(
+        arch=arch, shape_name=shape_name, kind="decode",
+        tokens=B, cfg=cfg, step_fn=serve_step,
+        args=(params_shapes, cache_shapes, tokens_spec,
+              _sds((), jnp.int32)),
+        in_shardings=(params_sh, cache_sh, tokens_sh, repl),
+        out_shardings=(logits_sh, cache_sh),
+        note=note + note_extra)

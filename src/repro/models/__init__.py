@@ -1,0 +1,7 @@
+"""repro.models — shardable JAX model zoo for the assigned architectures."""
+
+from .config import GLOBAL_ATTENTION, ModelConfig
+from .registry import Model, build_model, reduced_config
+
+__all__ = ["GLOBAL_ATTENTION", "Model", "ModelConfig", "build_model",
+           "reduced_config"]

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block — RecurrentGemma / Griffin (arXiv:2402.19427).
+
+Block structure (Griffin "recurrent block"):
+
+    x ── linear ─ GeLU ──────────────┐
+    x ── linear ─ causal conv1d(4) ─ RG-LRU ─┤ ⊙ ── linear ─ out
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = a^(c·r_t),  a = σ(Λ), c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Computed with an associative scan over T (prefill/train) or a one-step
+update (decode).  The recurrence width shards over the ``model`` axis
+(channel-wise — the technique's row-partitioning applied to the
+recurrence; DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init
+from .ssm import _causal_conv
+
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array      # (B, W) recurrent state (fp32)
+    conv: jax.Array   # (B, conv_width-1, W) conv tail
+
+
+def init_rglru_block(key: jax.Array, d_model: int, width: int,
+                     conv_width: int, dtype: Any) -> Params:
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = σ(Λ) ∈ (0.9, 0.999) — Griffin's init
+    u = jax.random.uniform(ks[5], (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1 / _C) / (1 - u ** (1 / _C)))
+    return {
+        "w_y": dense_init(ks[0], d_model, width, dtype),      # GeLU branch
+        "w_x": dense_init(ks[1], d_model, width, dtype),      # recurrent branch
+        "conv_w": (jax.random.normal(ks[2], (conv_width, width), jnp.float32)
+                   / math.sqrt(conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": dense_init(ks[3], width, width, dtype),        # recurrence gate
+        "b_a": jnp.zeros((width,), dtype),
+        "w_i": dense_init(ks[4], width, width, dtype),        # input gate
+        "b_i": jnp.zeros((width,), dtype),
+        "Lambda": lam,
+        "w_out": dense_init(ks[6], width, d_model, dtype),
+    }
+
+
+def _gates(params: Params, x: jax.Array):
+    """log(a_t) and scaled input; x (B,T,W) or (B,W)."""
+    r = jax.nn.sigmoid((x @ params["w_a"] + params["b_a"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_i"] + params["b_i"])
+                       .astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(params["Lambda"])          # (W,)
+    log_a = _C * r * log_a_base                                # ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    u = beta * (i * x.astype(jnp.float32))
+    return a, u
+
+
+def rglru_scan(params: Params, x: jax.Array,
+               h0: Optional[jax.Array] = None,
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Associative-scan RG-LRU over (B, T, W). Returns (y, h_T)."""
+    B, T, W = x.shape
+    a, u = _gates(params, x)                                    # fp32
+    if h0 is not None:
+        # fold the carried state into the first step:
+        # h_1 = a_1 h_0 + u_1  ->  u_1 += a_1 * h_0
+        u = u.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(params: Params, x_t: jax.Array, h: jax.Array,
+               ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. x_t (B, W), h (B, W) fp32."""
+    a, u = _gates(params, x_t)
+    h_new = a * h.astype(jnp.float32) + u
+    return h_new.astype(x_t.dtype), h_new
+
+
+def rglru_block(params: Params, x: jax.Array, *,
+                state: Optional[RGLRUState] = None,
+                single_step: bool = False,
+                ) -> Tuple[jax.Array, RGLRUState]:
+    """Full Griffin recurrent block on (B, T, d_model)."""
+    y_branch = jax.nn.gelu(x @ params["w_y"])
+    r = x @ params["w_x"]
+    tail = state.conv if state is not None else None
+    r, new_tail = _causal_conv(r, params["conv_w"], params["conv_b"], tail)
+    h0 = state.h if state is not None else None
+    if single_step:
+        out_t, h_new = rglru_step(params, r[:, 0],
+                                  h0 if h0 is not None
+                                  else jnp.zeros(r[:, 0].shape, jnp.float32))
+        rec = out_t[:, None]
+    else:
+        rec, h_new = rglru_scan(params, r, h0)
+    y = (y_branch * rec) @ params["w_out"]
+    return y, RGLRUState(h=h_new, conv=new_tail)

@@ -1,0 +1,231 @@
+"""Mamba-2 SSD — state-space duality, chunked (arXiv:2405.21060).
+
+The SSD recurrence per head:  h_t = exp(dt_t·A)·h_{t-1} + dt_t·B_t x_tᵀ,
+y_t = C_t·h_t + D·x_t, with scalar A per head (A < 0), B/C shared over
+head groups.  Training/prefill uses the chunked dual form (intra-chunk
+quadratic attention-like term + inter-chunk state passing); decode is
+the O(1) recurrent update on the (B, H, P, N) state.
+
+The chunk scan is a ``lax.scan`` over chunk states — on the mesh the
+sequence stays whole per device (ArcLight's technique applies to the
+projections, not the scan; DESIGN.md §Arch-applicability), while heads/
+channels shard over ``model``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init
+
+
+class SSDState(NamedTuple):
+    state: jax.Array   # (B, H, P, N) recurrent state
+    conv: jax.Array    # (B, W-1, conv_channels) causal-conv tail
+
+
+def init_ssd(key: jax.Array, d_model: int, *, n_heads: int, head_dim: int,
+             d_state: int, n_groups: int, conv_width: int,
+             dtype: Any) -> Params:
+    d_inner = n_heads * head_dim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "in_proj": dense_init(
+            ks[0], d_model,
+            2 * d_inner + 2 * n_groups * d_state + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, conv_ch),
+                                     jnp.float32)
+                   / math.sqrt(conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads,
+                                      dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[3], (n_heads,), jnp.float32,
+                math.log(1e-3), math.log(1e-1))))),
+        "norm_gain": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., L) -> (..., L, L) with out[i,j] = sum x[j+1..i], -inf j>i."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,T,C), w (W,C). Returns (y, new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)             # (B, T+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return jax.nn.silu(y + b), new_tail
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, *, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x (B,T,H,P); dt (B,T,H) (post-softplus); A (H,) negative;
+    Bm, Cm (B,T,G,N) with H % G == 0.  Returns (y (B,T,H,P),
+    final_state (B,H,P,N)).
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)                    # (B,T,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nC = Tp // chunk
+
+    def to_chunks(a):
+        return a.reshape(Bsz, nC, chunk, *a.shape[2:])
+
+    xc = to_chunks(x * dt[..., None].astype(x.dtype))   # u = dt * x
+    dAc = to_chunks(dt) * A[None, None, None, :]        # (B,c,l,H) log-decay
+    Bc, Cc = to_chunks(Bh), to_chunks(Ch)
+
+    dAc_t = jnp.moveaxis(dAc, -1, 2)                    # (B,c,H,l)
+    A_cum = jnp.cumsum(dAc_t, axis=-1)                  # (B,c,H,l)
+
+    # intra-chunk (diagonal blocks): Y_diag = (L ∘ C Bᵀ) u
+    L = jnp.exp(_segsum(dAc_t))                         # (B,c,H,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, L,
+                        xc.astype(jnp.float32))
+
+    # chunk-final states: S_c = Σ_s exp(A_cum_last - A_cum_s) B_s u_sᵀ
+    decay = jnp.exp(A_cum[..., -1:] - A_cum)            # (B,c,H,l)
+    states = jnp.einsum("bchl,bclhn,bclhp->bchpn", decay,
+                        Bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over c
+    chunk_decay = jnp.exp(A_cum[..., -1])               # (B,c,H)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def scan_fn(carry, inp):
+        dec, st = inp                                   # (B,H), (B,H,P,N)
+        new = carry * dec[..., None, None] + st
+        return new, carry                               # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,c,H,P,N)
+
+    # inter-chunk contribution: Y_off = C_t · exp(A_cum_t) · S_{c-1}
+    state_decay = jnp.exp(A_cum)                        # (B,c,H,l)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp",
+                       Cc.astype(jnp.float32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, Tp, H, P)[:, :T]
+    return y.astype(x.dtype), final
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                  Cm: jax.Array,
+                  initial_state: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Step-by-step recurrent oracle (slow, for tests)."""
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    h = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+         if initial_state is None else initial_state.astype(jnp.float32))
+    ys = []
+    for t in range(T):
+        dA = jnp.exp(dt[:, t] * A[None, :])             # (B,H)
+        u = (x[:, t] * dt[:, t][..., None]).astype(jnp.float32)
+        h = h * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", u, Bh[:, t])
+        ys.append(jnp.einsum("bhpn,bhn->bhp", h, Ch[:, t]))
+    return jnp.stack(ys, axis=1).astype(x.dtype), h
+
+
+def ssd_decode_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    A: jax.Array, B_t: jax.Array, C_t: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence.  x_t (B,H,P), dt_t (B,H), B_t/C_t (B,G,N)."""
+    H = x_t.shape[1]
+    rep = H // B_t.shape[1]
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt_t * A[None, :])
+    u = (x_t * dt_t[..., None]).astype(jnp.float32)
+    new_state = (state * dA[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", u, Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state
+
+
+# ----------------------------------------------------------------------
+# full block (proj -> conv -> SSD -> gate -> out proj)
+# ----------------------------------------------------------------------
+
+def _split_proj(proj: jax.Array, *, d_inner: int, n_groups: int,
+                d_state: int, n_heads: int):
+    sizes = [d_inner, d_inner, n_groups * d_state, n_groups * d_state,
+             n_heads]
+    idx = [sum(sizes[:i + 1]) for i in range(len(sizes) - 1)]
+    return jnp.split(proj, idx, axis=-1)
+
+
+def ssd_block(params: Params, x: jax.Array, *, n_heads: int, head_dim: int,
+              d_state: int, n_groups: int, chunk: int,
+              state: Optional[SSDState] = None,
+              ) -> Tuple[jax.Array, SSDState]:
+    """Full Mamba-2 block on (B, T, d_model).  Returns (y, new_state)."""
+    from .common import rms_norm
+
+    Bsz, T, _ = x.shape
+    d_inner = n_heads * head_dim
+    proj = x @ params["in_proj"]
+    z, xs, Bf, Cf, dt = _split_proj(proj, d_inner=d_inner,
+                                    n_groups=n_groups, d_state=d_state,
+                                    n_heads=n_heads)
+    conv_in = jnp.concatenate([xs, Bf, Cf], axis=-1)
+    tail = state.conv if state is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], tail)
+    xs, Bf, Cf = jnp.split(
+        conv_out, [d_inner, d_inner + n_groups * d_state], axis=-1)
+    xh = xs.reshape(Bsz, T, n_heads, head_dim)
+    Bm = Bf.reshape(Bsz, T, n_groups, d_state)
+    Cm = Cf.reshape(Bsz, T, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    prev = state.state if state is not None else None
+    y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk,
+                                 initial_state=prev)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(Bsz, T, d_inner)
+    y = rms_norm(y, params["norm_gain"]) * jax.nn.silu(z)
+    return y @ params["out_proj"], SSDState(state=final_state,
+                                            conv=new_tail)

@@ -1,0 +1,829 @@
+"""Unified transformer covering all assigned architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` exposing
+
+    init(key)                      -> params
+    forward(params, batch)         -> logits              (teacher forcing)
+    loss(params, batch)            -> (scalar, metrics)
+    init_cache(B, max_len, ...)    -> cache (zeros)
+    prefill(params, batch, cache)  -> (logits, cache)
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+Layer stacks compile as a single ``lax.scan`` over stacked parameters
+when every layer has the same structure (uniform mode — all dense
+archs, MoE archs, Mamba-2 and Whisper), and as an unrolled loop for
+heterogeneous patterns (RecurrentGemma's (R,R,A), Llama-3.2-Vision's
+every-5th cross-attention layer).  Attention *metadata* — per-layer
+sliding window and RoPE base — stays data, so gemma3's 5:1
+local:global pattern remains uniform.
+
+KV caches are ring buffers: slot = position mod cache_len, with an
+explicit per-slot absolute-position array used for masking.  With
+``cache_len == max_len`` this degenerates to the ordinary linear cache;
+with ``cache_len == window`` it is the sliding-window cache used for
+the long_500k shapes (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from .attention import AttnPartial, flash_attention
+from .common import (Params, cross_entropy, dense_init, embed_init,
+                     layer_norm, mlp, init_mlp, rms_norm, unembed)
+from .config import ModelConfig
+from .moe import init_moe, moe
+from .recurrent import RGLRUState, init_rglru_block, rglru_block
+from .ssm import SSDState, init_ssd, ssd_block
+
+
+# ----------------------------------------------------------------------
+# parameter init
+# ----------------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, d: int) -> Params:
+    p: Params = {"g": jnp.zeros((d,), cfg.dtype)}
+    if cfg.arch_type == "audio":  # whisper uses LayerNorm with bias
+        p = {"g": jnp.ones((d,), cfg.dtype), "b": jnp.zeros((d,), cfg.dtype)}
+    return p
+
+
+def _apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if "b" in p:
+        return layer_norm(x, p["g"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["g"], cfg.norm_eps)
+
+
+def _init_attn(key: jax.Array, cfg: ModelConfig, *, cross: bool) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    qdim, kvdim = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "w_q": dense_init(ks[0], d, qdim, cfg.dtype),
+        "w_k": dense_init(ks[1], d, kvdim, cfg.dtype),
+        "w_v": dense_init(ks[2], d, kvdim, cfg.dtype),
+        "w_o": dense_init(ks[3], qdim, d, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((qdim,), cfg.dtype)
+        p["b_k"] = jnp.zeros((kvdim,), cfg.dtype)
+        p["b_v"] = jnp.zeros((kvdim,), cfg.dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.dtype)
+    if cross:
+        p["gate"] = jnp.zeros((), cfg.dtype)   # tanh-gated cross-attn
+    return p
+
+
+def _init_ffn(key: jax.Array, cfg: ModelConfig) -> Params:
+    if cfg.n_experts:
+        return {"moe": init_moe(key, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                cfg.act, cfg.dtype)}
+    return {"mlp": init_mlp(key, cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype)}
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, kind: str, *,
+                decoder_cross: bool = False) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {"ln1": _init_norm(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = _init_attn(ks[0], cfg, cross=False)
+        if decoder_cross:  # whisper decoder: self + cross in every layer
+            p["ln_x"] = _init_norm(cfg, cfg.d_model)
+            p["xattn"] = _init_attn(ks[1], cfg, cross=True)
+        p["ln2"] = _init_norm(cfg, cfg.d_model)
+        p.update(_init_ffn(ks[2], cfg))
+    elif kind == "xattn":
+        p["xattn"] = _init_attn(ks[0], cfg, cross=True)
+        p["ln2"] = _init_norm(cfg, cfg.d_model)
+        p.update({"mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act,
+                                  cfg.dtype)})
+    elif kind == "rglru":
+        p["rglru"] = init_rglru_block(ks[0], cfg.d_model,
+                                      cfg.lru_width or cfg.d_model,
+                                      cfg.ssm_conv, cfg.dtype)
+        p["ln2"] = _init_norm(cfg, cfg.d_model)
+        p.update(_init_ffn(ks[2], cfg))
+    elif kind == "ssd":
+        p["ssd"] = init_ssd(ks[0], cfg.d_model, n_heads=cfg.ssm_heads,
+                            head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                            n_groups=cfg.ssm_groups, conv_width=cfg.ssm_conv,
+                            dtype=cfg.dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+# ----------------------------------------------------------------------
+# attention forward (shared by self/cross, train/prefill/decode)
+# ----------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, ap: Params, xq: jax.Array,
+                 xkv: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    hd = cfg.resolved_head_dim
+    q = xq @ ap["w_q"]
+    k = xkv @ ap["w_k"]
+    v = xkv @ ap["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + ap["b_q"], k + ap["b_k"], v + ap["b_v"]
+    Bq, Sq = xq.shape[:2]
+    Bk, Sk = xkv.shape[:2]
+    q = q.reshape(Bq, Sq, cfg.n_heads, hd)
+    k = k.reshape(Bk, Sk, cfg.n_kv_heads, hd)
+    v = v.reshape(Bk, Sk, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, ap["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, ap["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+          theta: jax.Array) -> jax.Array:
+    d = x.shape[-1]
+    exponents = jnp.arange(0, d, 2, dtype=jnp.float32) / d
+    freqs = jnp.power(jnp.asarray(theta, jnp.float32), -exponents)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def _write_cache(cache_k: jax.Array, cache_v: jax.Array,
+                 cache_pos: jax.Array, k: jax.Array, v: jax.Array,
+                 positions: jax.Array):
+    """Ring-buffer write. cache_* (B,M,H,D), positions (S,) absolute."""
+    M = cache_k.shape[1]
+    S = k.shape[1]
+    if S >= M:  # keep only the last M tokens (static shapes)
+        k, v = k[:, -M:], v[:, -M:]
+        positions = positions[-M:]
+    slots = positions % M
+    if k.shape[1] == 1:
+        # single-token decode: dynamic_update_slice keeps a sharded
+        # sequence axis local (a scatter would make GSPMD gather it)
+        slot = slots[0]
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, 1)
+        cache_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache_pos, positions, slot, 0)
+    else:
+        cache_k = cache_k.at[:, slots].set(k)
+        cache_v = cache_v.at[:, slots].set(v)
+        cache_pos = cache_pos.at[slots].set(positions)
+    return cache_k, cache_v, cache_pos
+
+
+# ----------------------------------------------------------------------
+# layer forward
+# ----------------------------------------------------------------------
+
+ATTN_CHUNK = 512
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_save_gather:
+        return jax.checkpoint_policies.save_only_these_names("block_out")
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _self_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
+               positions: jax.Array, theta: jax.Array, window: jax.Array,
+               cache: Optional[Dict[str, jax.Array]], *, causal: bool,
+               decode_hook=None, act_constraint=None,
+               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    q, k, v = _project_qkv(cfg, ap, x, x)
+    if act_constraint is not None:
+        # batch-only pinning stops GSPMD from "helpfully" splitting the
+        # replicated-head attention contraction over the model axis and
+        # psum-ing every score chunk (measured: 893 GB/step on gemma3
+        # prefill_32k — EXPERIMENTS §Perf)
+        q, k, v = act_constraint(q), act_constraint(k), act_constraint(v)
+    q = _rope(cfg, q, positions, theta)
+    k = _rope(cfg, k, positions, theta)
+    new_cache = None
+    if cache is not None and decode_hook is not None and S == 1:
+        # sequence-sharded flash-decoding with local cache write
+        # (launcher-installed; see launch.shardings.make_decode_attn_hook)
+        out, ck, cv, cp = decode_hook(q, k, v, cache["k"], cache["v"],
+                                      cache["pos"], window, positions[0])
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+    elif cache is not None:
+        ck, cv, cp = _write_cache(cache["k"], cache["v"], cache["pos"],
+                                  k, v, positions)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        if S > 1:
+            # prefill: the cache was empty, so attending over the fresh
+            # (batch-sharded, model-replicated) k/v is identical maths
+            # and independent of the cache's storage sharding
+            out = flash_attention(
+                q, k, v, causal=True, window=window, chunk=ATTN_CHUNK,
+                softcap=cfg.attn_logit_softcap)
+        else:
+            out = flash_attention(
+                q, ck, cv, causal=True, window=window,
+                q_offset=positions[0], kv_positions=cp, chunk=ATTN_CHUNK,
+                softcap=cfg.attn_logit_softcap)
+    else:
+        # training path: rematerialise the blockwise attention in the
+        # backward pass — the kv-chunk scan would otherwise save its
+        # (out, m, l) carries for every chunk (≈ S/chunk copies of the
+        # output; measured 8.6 GB/layer on llama-vision train_4k)
+        def attn_fn(q_, k_, v_, w_):
+            return flash_attention(
+                q_, k_, v_, causal=causal, window=w_, chunk=ATTN_CHUNK,
+                softcap=cfg.attn_logit_softcap)
+        out = jax.checkpoint(attn_fn)(q, k, v, window)
+    if act_constraint is not None:
+        out = act_constraint(out)
+    return out.reshape(B, S, -1) @ ap["w_o"], new_cache
+
+
+def _cross_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
+                memory: jax.Array) -> jax.Array:
+    """Cross-attention over memory embeddings (B, M, d_model).
+
+    K/V are projected on the fly (their cost is negligible next to the
+    self-attention cache traffic; caching them is a recorded perf
+    candidate in EXPERIMENTS.md §Perf)."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    M = memory.shape[1]
+    q = x @ ap["w_q"]
+    k = memory @ ap["w_k"]
+    v = memory @ ap["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + ap["b_q"], k + ap["b_k"], v + ap["b_v"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, M, cfg.n_kv_heads, hd)
+    v = v.reshape(B, M, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, ap["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, ap["k_norm"], cfg.norm_eps)
+    out = flash_attention(q, k, v, causal=False, chunk=ATTN_CHUNK)
+    out = out.reshape(B, S, -1) @ ap["w_o"]
+    if "gate" in ap:
+        out = jnp.tanh(ap["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out
+
+
+def _ffn(cfg: ModelConfig, lp: Params, x: jax.Array,
+         moe_hook=None) -> Tuple[jax.Array, jax.Array]:
+    if "moe" in lp:
+        if moe_hook is not None:   # launcher-installed shard_map dispatch
+            return moe_hook(lp["moe"], x)
+        y, aux = moe(lp["moe"], x, k=cfg.experts_per_token, act=cfg.act,
+                     impl=cfg.moe_impl, capacity_factor=cfg.capacity_factor)
+        return y, aux
+    return mlp(lp["mlp"], x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _layer_forward(cfg: ModelConfig, kind: str, lp: Params, x: jax.Array,
+                   positions: jax.Array, theta: jax.Array,
+                   window: jax.Array, cache: Optional[Dict[str, Any]],
+                   memory: Optional[Dict[str, jax.Array]], *,
+                   causal: bool, decoder_cross: bool = False,
+                   single_step: bool = False, moe_hook=None,
+                   decode_hook=None, act_constraint=None,
+                   ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """One block. Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[Dict[str, Any]] = None
+    h = _apply_norm(cfg, lp["ln1"], x)
+    if kind == "attn":
+        a, kv = _self_attn(cfg, lp["attn"], h, positions, theta, window,
+                           None if cache is None else cache.get("self"),
+                           causal=causal, decode_hook=decode_hook,
+                           act_constraint=act_constraint)
+        # post-Gather activations are remat save-points: recomputing
+        # them would repeat the TP psum in the backward pass
+        x = x + checkpoint_name(a, "block_out")
+        new_cache = {} if cache is not None else None
+        if kv is not None:
+            assert new_cache is not None
+            new_cache["self"] = kv
+        if decoder_cross:
+            hx = _apply_norm(cfg, lp["ln_x"], x)
+            assert memory is not None
+            x = x + _cross_attn(cfg, lp["xattn"], hx, memory)
+        h2 = _apply_norm(cfg, lp["ln2"], x)
+        f, aux = _ffn(cfg, lp, h2, moe_hook)
+        x = x + checkpoint_name(f, "block_out")
+    elif kind == "xattn":
+        assert memory is not None
+        x = x + _cross_attn(cfg, lp["xattn"], h, memory)
+        h2 = _apply_norm(cfg, lp["ln2"], x)
+        x = x + mlp(lp["mlp"], h2, cfg.act)
+        new_cache = {} if cache is not None else None
+    elif kind == "rglru":
+        st = None if cache is None else RGLRUState(**cache["rglru"])
+        y, new_st = rglru_block(lp["rglru"], h, state=st,
+                                single_step=single_step)
+        x = x + y
+        h2 = _apply_norm(cfg, lp["ln2"], x)
+        f, aux = _ffn(cfg, lp, h2, moe_hook)
+        x = x + f
+        if cache is not None:
+            new_cache = {"rglru": new_st._asdict()}
+    elif kind == "ssd":
+        st = None if cache is None else SSDState(**cache["ssd"])
+        y, new_st = ssd_block(lp["ssd"], h, n_heads=cfg.ssm_heads,
+                              head_dim=cfg.ssm_head_dim,
+                              d_state=cfg.ssm_state, n_groups=cfg.ssm_groups,
+                              chunk=cfg.ssm_chunk, state=st)
+        x = x + y
+        if cache is not None:
+            new_cache = {"ssd": new_st._asdict()}
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------
+# the Model
+# ----------------------------------------------------------------------
+
+class Model:
+    """Unified model over a ModelConfig (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+        self.kinds = cfg.layer_kinds
+        self.uniform = cfg.uniform
+        self.decoder_cross = cfg.is_encoder_decoder
+        # periodic pattern archs scan over super-blocks (period p):
+        # llama-vision (4 attn + 1 xattn), recurrentgemma (R,R,A) —
+        # real per-block remat + O(p) HLO instead of O(n_layers)
+        self.block_period = 0
+        if not self.uniform:
+            p = (len(cfg.block_pattern) if cfg.block_pattern
+                 else cfg.cross_attn_every)
+            if p and cfg.n_layers >= 2 * p:
+                self.block_period = p
+        self.n_full_blocks = (cfg.n_layers // self.block_period
+                              if self.block_period else 0)
+        self.n_tail = (cfg.n_layers - self.n_full_blocks * self.block_period
+                       if self.block_period else cfg.n_layers)
+        #: optional sharding hooks installed by the launcher
+        #: (repro.launch.shardings): per-layer weight unshard constraint
+        #: (FSDP) and activation batch constraint.
+        self.param_constraint = None
+        self.act_constraint = None
+        self.moe_hook = None
+        self.decode_attn_hook = None
+        self.cache_constraint = None
+        self.attn_act_constraint = None   # pin q/k/v only for
+                                          # replicated-attention archs
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        params: Params = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                cfg.dtype),
+            "final_norm": _init_norm(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], cfg.d_model,
+                                           cfg.vocab_size, cfg.dtype)
+        if self.uniform:
+            keys = jax.random.split(ks[2], cfg.n_layers)
+            params["layers"] = jax.vmap(
+                lambda k: _init_layer(k, cfg, self.kinds[0],
+                                      decoder_cross=self.decoder_cross)
+            )(keys)
+        elif self.block_period:
+            p_ = self.block_period
+            nb = self.n_full_blocks
+            keys = jax.random.split(ks[2], cfg.n_layers)
+            blocks = []
+            for j in range(p_):
+                kind = self.kinds[j]
+                pos_keys = jnp.stack([keys[b * p_ + j] for b in range(nb)])
+                blocks.append(jax.vmap(
+                    lambda k, kind=kind: _init_layer(k, cfg, kind)
+                )(pos_keys))
+            tail = [_init_layer(keys[nb * p_ + t], cfg,
+                                self.kinds[nb * p_ + t])
+                    for t in range(self.n_tail)]
+            params["layers"] = {"blocks": blocks, "tail": tail}
+        else:
+            keys = jax.random.split(ks[2], cfg.n_layers)
+            params["layers"] = [
+                _init_layer(keys[i], cfg, kind)
+                for i, kind in enumerate(self.kinds)]
+        if cfg.is_encoder_decoder:
+            ekeys = jax.random.split(ks[3], cfg.n_encoder_layers)
+            enc_cfg = dataclasses.replace(cfg, n_experts=0)
+            params["encoder"] = {
+                "layers": jax.vmap(
+                    lambda k: _init_layer(k, enc_cfg, "attn"))(ekeys),
+                "final_norm": _init_norm(cfg, cfg.d_model),
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _layer_cache(self, kind: str, batch: int, cache_len: int,
+                     dtype: Any) -> Dict[str, Any]:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        if kind in ("attn",):
+            return {"self": {
+                "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+                "pos": jnp.full((cache_len,), -1, jnp.int32)}}
+        if kind == "xattn":
+            return {}
+        if kind == "rglru":
+            width = cfg.lru_width or cfg.d_model
+            return {"rglru": {
+                "h": jnp.zeros((batch, width), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1, width), dtype)}}
+        if kind == "ssd":
+            d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+            conv_ch = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            return {"ssd": {
+                "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch),
+                                  dtype)}}
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, max_len: int, *,
+                   cache_len: Optional[int] = None,
+                   memory_len: int = 0) -> Dict[str, Any]:
+        """Zero cache.  ``cache_len`` < max_len -> sliding ring buffer."""
+        cfg = self.cfg
+        cl = min(cache_len or max_len, max_len)
+        cache: Dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
+        if self.uniform:
+            one = self._layer_cache(self.kinds[0], batch, cl, cfg.dtype)
+            cache["layers"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.n_layers,) + x.shape).copy(), one)
+        elif self.block_period:
+            p_, nb = self.block_period, self.n_full_blocks
+            blocks = []
+            for j in range(p_):
+                one = self._layer_cache(self.kinds[j], batch, cl, cfg.dtype)
+                blocks.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (nb,) + x.shape).copy(), one))
+            tail = [self._layer_cache(self.kinds[nb * p_ + t], batch, cl,
+                                      cfg.dtype)
+                    for t in range(self.n_tail)]
+            cache["layers"] = {"blocks": blocks, "tail": tail}
+        else:
+            cache["layers"] = [
+                self._layer_cache(kind, batch, cl, cfg.dtype)
+                for kind in self.kinds]
+        if memory_len:
+            cache["memory"] = jnp.zeros((batch, memory_len, cfg.d_model),
+                                        cfg.dtype)
+        return cache
+
+    # ------------------------------------------------------------------
+    # layer stack runners
+    # ------------------------------------------------------------------
+    def _stack_meta(self):
+        cfg = self.cfg
+        windows = jnp.asarray(cfg.layer_windows(0), jnp.int32)
+        thetas = jnp.asarray(cfg.layer_thetas(), jnp.float32)
+        return windows, thetas
+
+    def _run_uniform(self, layers: Params, x: jax.Array,
+                     positions: jax.Array, caches: Optional[Params],
+                     memory: Optional[jax.Array], *, causal: bool,
+                     single_step: bool, window_override: Optional[int],
+                     decoder_cross: bool, kind: str,
+                     ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+        cfg = self.cfg
+        windows, thetas = self._stack_meta()
+        if window_override is not None:
+            windows = jnp.full_like(windows, window_override)
+
+        fwd = functools.partial(
+            _layer_forward, cfg, kind, causal=causal,
+            decoder_cross=decoder_cross, single_step=single_step,
+            moe_hook=self.moe_hook, decode_hook=self.decode_attn_hook,
+            act_constraint=self.attn_act_constraint)
+        if cfg.remat and caches is None:   # checkpoint each layer (train)
+            fwd = jax.checkpoint(fwd, policy=_remat_policy(cfg))
+
+        if caches is None:
+            def body(carry, xs):
+                h, aux = carry
+                lp, window, theta = xs
+                if self.param_constraint is not None:
+                    lp = self.param_constraint(lp)
+                h, _, a = fwd(lp, h, positions, theta, window, None, memory)
+                return (h, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)),
+                (layers, windows, thetas))
+            return x, None, aux
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, window, theta, cache = xs
+            if self.param_constraint is not None:
+                lp = self.param_constraint(lp)
+            h, new_cache, a = fwd(lp, h, positions, theta, window, cache,
+                                  memory)
+            return (h, aux + a), new_cache
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (layers, windows, thetas, caches))
+        return x, new_caches, aux
+
+    def _run_blocks(self, layers: Params, x: jax.Array,
+                    positions: jax.Array, caches, memory, *, causal: bool,
+                    single_step: bool, window_override: Optional[int],
+                    ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+        """Scan over super-blocks of a periodic pattern (see __init__)."""
+        cfg = self.cfg
+        p_, nb = self.block_period, self.n_full_blocks
+        windows = list(cfg.layer_windows(0))
+        thetas = list(cfg.layer_thetas())
+        if window_override is not None:
+            windows = [window_override] * cfg.n_layers
+        win_rows = jnp.asarray(
+            [[windows[b * p_ + j] for j in range(p_)] for b in range(nb)],
+            jnp.int32)                                   # (nb, p)
+        theta_rows = jnp.asarray(
+            [[thetas[b * p_ + j] for j in range(p_)] for b in range(nb)],
+            jnp.float32)
+
+        fwd = functools.partial(
+            _layer_forward, cfg, causal=causal, single_step=single_step,
+            moe_hook=self.moe_hook, decode_hook=self.decode_attn_hook,
+            act_constraint=self.attn_act_constraint)
+
+        def block_body(carry, xs):
+            h, aux = carry
+            lps, wrow, trow, crow = xs
+            new_crow = [] if crow is not None else None
+            for j in range(p_):
+                lp = lps[j]
+                if self.param_constraint is not None:
+                    lp = self.param_constraint(lp)
+                cache_j = None if crow is None else crow[j]
+                h, nc, a = fwd(self.kinds[j], lp, h, positions, trow[j],
+                               wrow[j], cache_j, memory)
+                aux = aux + a
+                if new_crow is not None:
+                    new_crow.append(nc if nc is not None else {})
+            return (h, aux), new_crow
+
+        body = block_body
+        if cfg.remat and caches is None:
+            body = jax.checkpoint(block_body, policy=_remat_policy(cfg))
+
+        blocks = layers["blocks"]
+        cache_blocks = None if caches is None else caches["blocks"]
+
+        def scan_body(carry, xs):
+            if caches is None:
+                lps, wrow, trow = xs
+                return body(carry, (lps, wrow, trow, None))
+            lps, wrow, trow, crow = xs
+            return body(carry, (lps, wrow, trow, crow))
+
+        xs = ((blocks, win_rows, theta_rows) if caches is None
+              else (blocks, win_rows, theta_rows, cache_blocks))
+        (x, aux), new_blocks = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), xs)
+
+        # unrolled remainder layers
+        new_tail = None if caches is None else []
+        for t in range(self.n_tail):
+            i = nb * p_ + t
+            lp = layers["tail"][t]
+            if self.param_constraint is not None:
+                lp = self.param_constraint(lp)
+            cache_t = None if caches is None else caches["tail"][t]
+            x, nc, a = fwd(self.kinds[i], lp, x, positions,
+                           jnp.asarray(thetas[i], jnp.float32),
+                           jnp.asarray(windows[i], jnp.int32), cache_t,
+                           memory)
+            aux = aux + a
+            if new_tail is not None:
+                new_tail.append(nc if nc is not None else {})
+        new_caches = (None if caches is None
+                      else {"blocks": new_blocks, "tail": new_tail})
+        return x, new_caches, aux
+
+    def _run_pattern(self, layers: List[Params], x: jax.Array,
+                     positions: jax.Array, caches: Optional[List],
+                     memory: Optional[jax.Array], *, causal: bool,
+                     single_step: bool, window_override: Optional[int],
+                     ) -> Tuple[jax.Array, Optional[List], jax.Array]:
+        cfg = self.cfg
+        windows = cfg.layer_windows(0)
+        thetas = cfg.layer_thetas()
+        aux = jnp.zeros((), jnp.float32)
+        new_caches: Optional[List] = None if caches is None else []
+        for i, kind in enumerate(self.kinds):
+            w = window_override if window_override is not None else windows[i]
+            cache_i = None if caches is None else caches[i]
+            lp_i = layers[i]
+            if self.param_constraint is not None:
+                lp_i = self.param_constraint(lp_i)
+            fwd = functools.partial(
+                _layer_forward, cfg, kind, causal=causal,
+                single_step=single_step, moe_hook=self.moe_hook,
+                decode_hook=self.decode_attn_hook,
+                act_constraint=self.attn_act_constraint)
+            if cfg.remat and caches is None:   # per-layer remat (train)
+                fwd = jax.checkpoint(fwd)
+            x, nc, a = fwd(
+                lp_i, x, positions,
+                jnp.asarray(thetas[i], jnp.float32),
+                jnp.asarray(w, jnp.int32), cache_i, memory)
+            aux = aux + a
+            if new_caches is not None:
+                new_caches.append(nc if nc is not None else {})
+        return x, new_caches, aux
+
+    def _run_layers(self, params: Params, x: jax.Array,
+                    positions: jax.Array, caches, memory, *, causal: bool,
+                    single_step: bool = False,
+                    window_override: Optional[int] = None):
+        if self.uniform:
+            return self._run_uniform(
+                params["layers"], x, positions, caches, memory,
+                causal=causal, single_step=single_step,
+                window_override=window_override,
+                decoder_cross=self.decoder_cross, kind=self.kinds[0])
+        if self.block_period:
+            return self._run_blocks(
+                params["layers"], x, positions, caches, memory,
+                causal=causal, single_step=single_step,
+                window_override=window_override)
+        return self._run_pattern(
+            params["layers"], x, positions, caches, memory,
+            causal=causal, single_step=single_step,
+            window_override=window_override)
+
+    def _encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """Whisper-style encoder over stub frame embeddings (B, F, d)."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        positions = jnp.arange(frames.shape[1])
+        windows = jnp.zeros((cfg.n_encoder_layers,), jnp.int32)
+        thetas = jnp.full((cfg.n_encoder_layers,), cfg.rope_theta,
+                          jnp.float32)
+        fwd = functools.partial(_layer_forward, cfg, "attn", causal=False,
+                                decoder_cross=False, single_step=False)
+
+        def body(carry, xs):
+            lp, window, theta = xs
+            h, _, _ = fwd(lp, carry, positions, theta, window, None, None)
+            return h, None
+
+        x, _ = jax.lax.scan(body, frames, (enc["layers"], windows, thetas))
+        return _apply_norm(cfg, enc["final_norm"], x)
+
+    def _memory_from_batch(self, params: Params, batch: Dict[str, Any],
+                           ) -> Optional[jax.Array]:
+        if self.cfg.is_encoder_decoder:
+            return self._encode(params, batch["frames"])
+        if self.cfg.cross_attn_every:
+            return batch["image_embeds"]
+        return None
+
+    def _logits(self, params: Params, x: jax.Array) -> jax.Array:
+        x = _apply_norm(self.cfg, params["final_norm"], x)
+        head = (params["embed"] if self.cfg.tie_embeddings
+                else params["lm_head"])
+        return unembed(head, x, tied=self.cfg.tie_embeddings)
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+    def _hidden_states(self, params: Params, batch: Dict[str, Any],
+                       ) -> Tuple[jax.Array, jax.Array]:
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.act_constraint is not None:
+            x = self.act_constraint(x)
+        positions = jnp.arange(tokens.shape[1])
+        memory = self._memory_from_batch(params, batch)
+        x, _, aux = self._run_layers(params, x, positions, None, memory,
+                                     causal=True)
+        return _apply_norm(self.cfg, params["final_norm"], x), aux
+
+    def forward(self, params: Params, batch: Dict[str, Any],
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Teacher-forcing logits over the whole sequence (train)."""
+        h, aux = self._hidden_states(params, batch)
+        head = (params["embed"] if self.cfg.tie_embeddings
+                else params["lm_head"])
+        return unembed(head, h, tied=self.cfg.tie_embeddings), aux
+
+    LOSS_CHUNK = 512
+
+    def loss(self, params: Params, batch: Dict[str, Any],
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Chunked cross entropy: logits are materialised only one
+        sequence chunk at a time — full (B, S, V) fp32 logits of a
+        256k-vocab model would dwarf every other activation."""
+        h, aux = self._hidden_states(params, batch)
+        head = (params["embed"] if self.cfg.tie_embeddings
+                else params["lm_head"])
+        labels = batch["labels"]
+        B, S, d = h.shape
+        C = min(self.LOSS_CHUNK, S)
+        pad = (-S) % C
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                             constant_values=-100)
+        n_chunks = (S + pad) // C
+        hc = jnp.moveaxis(h.reshape(B, n_chunks, C, d), 1, 0)
+        yc = jnp.moveaxis(labels.reshape(B, n_chunks, C), 1, 0)
+
+        def body(carry, xs):
+            nll_sum, count = carry
+            h_i, y_i = xs
+            if self.act_constraint is not None:
+                h_i = self.act_constraint(h_i)
+            logits = unembed(head, h_i, tied=self.cfg.tie_embeddings)
+            lf = logits.astype(jnp.float32)
+            logz = jax.nn.logsumexp(lf, axis=-1)
+            gold = jnp.take_along_axis(
+                lf, jnp.clip(y_i, 0)[..., None], axis=-1)[..., 0]
+            mask = (y_i != -100).astype(jnp.float32)
+            nll_sum = nll_sum + jnp.sum((logz - gold) * mask)
+            count = count + jnp.sum(mask)
+            return (nll_sum, count), None
+
+        (nll_sum, count), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hc, yc))
+        ce = nll_sum / jnp.maximum(count, 1.0)
+        total = ce + self.cfg.router_aux_coef * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(self, params: Params, batch: Dict[str, Any],
+                cache: Dict[str, Any], *,
+                window_override: Optional[int] = None,
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Process the prompt, fill the cache, return last-token logits."""
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.act_constraint is not None:
+            x = self.act_constraint(x)
+        positions = jnp.arange(tokens.shape[1])
+        memory = self._memory_from_batch(params, batch)
+        x, new_layers, _ = self._run_layers(
+            params, x, positions, cache["layers"], memory, causal=True,
+            window_override=window_override)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        new_cache["length"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        if memory is not None:
+            new_cache["memory"] = memory
+        return self._logits(params, x[:, -1:]), new_cache
+
+    def decode_step(self, params: Params, cache: Dict[str, Any],
+                    tokens: jax.Array, pos: jax.Array, *,
+                    window_override: Optional[int] = None,
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One decode step. tokens (B, 1); pos scalar absolute position."""
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.cache_constraint is not None:
+            cache = self.cache_constraint(cache)
+        positions = pos + jnp.arange(1)
+        memory = cache.get("memory")
+        x, new_layers, _ = self._run_layers(
+            params, x, positions, cache["layers"], memory, causal=True,
+            single_step=True, window_override=window_override)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        new_cache["length"] = (pos + 1).astype(jnp.int32)
+        if self.cache_constraint is not None:
+            new_cache = self.cache_constraint(new_cache)
+        return self._logits(params, x), new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,87 @@
+"""Q4_0 block quantization — the paper's weight format (§4: "quantized
+in the Q4_0 format").
+
+llama.cpp Q4_0: contiguous blocks of 32 values share one fp16 scale
+``d = max_abs / -8``; each value is stored as a 4-bit code
+``q = clamp(round(x/d) + 8, 0, 15)`` and dequantizes to ``(q - 8)·d``.
+
+Here a weight ``W (K, N)`` is quantized along the contraction axis K
+(so a GEMM tile's scales are contiguous):
+
+    packed  (K//2,  N) uint8 — two 4-bit codes per byte
+                               (low nibble = even k, high nibble = odd k)
+    scales  (K//32, N) f32   — per 32-row block, per column
+
+Effective 4.5 bits/weight, matching the paper's 0.5625 B/weight used by
+the NUMA cost model.  ``repro.kernels.q4_gemm`` consumes this layout
+directly (HBM→VMEM tile, unpack + dequant in VMEM, MXU matmul).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+BLOCK = 32
+BYTES_PER_WEIGHT = 4 / 8 + 2 / BLOCK  # 4-bit code + fp16 scale share
+
+
+def quantize(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """W (K, N) float -> (packed (K//2, N) uint8, scales (K//32, N) f32)."""
+    K, N = w.shape
+    if K % BLOCK:
+        raise ValueError(f"K={K} not a multiple of {BLOCK}")
+    wf = jnp.asarray(w, jnp.float32).reshape(K // BLOCK, BLOCK, N)
+    absmax = jnp.max(jnp.abs(wf), axis=1)                     # (K/32, N)
+    imax = jnp.argmax(jnp.abs(wf), axis=1)
+    signed_max = jnp.take_along_axis(wf, imax[:, None, :], axis=1)[:, 0, :]
+    scale = signed_max / -8.0                                 # llama.cpp sign trick
+    inv = jnp.where(scale != 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(wf * inv[:, None, :]) + 8, 0, 15).astype(jnp.uint8)
+    q = q.reshape(K, N)
+    lo = q[0::2]                                              # even k rows
+    hi = q[1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)               # (K/2, N)
+    # fp16 round-trip of the scale, stored f32 for TPU friendliness
+    scales = scale.astype(jnp.float16).astype(jnp.float32)
+    return packed, scales
+
+
+def unpack_codes(packed: jax.Array) -> jax.Array:
+    """(K//2, N) uint8 -> (K, N) int8 codes in [-8, 7]."""
+    lo = (packed & 0x0F).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    K2, N = packed.shape
+    out = jnp.stack([lo, hi], axis=1)                         # (K/2, 2, N)
+    return out.reshape(2 * K2, N)
+
+
+def dequantize(packed: jax.Array, scales: jax.Array,
+               dtype=jnp.float32) -> jax.Array:
+    codes = unpack_codes(packed).astype(jnp.float32)          # (K, N)
+    K = codes.shape[0]
+    s = jnp.repeat(scales, BLOCK, axis=0)                     # (K, N)
+    return (codes * s).astype(dtype)
+
+
+def quantize_params(params, *, min_size: int = 1024):
+    """Quantize every 2-D weight in a pytree; returns (q_tree, meta).
+
+    Leaves become dicts {"packed", "scales"}; small or non-2D leaves
+    stay dense.  Used by the serving engine's Q4_0 mode."""
+    def q(x):
+        if (hasattr(x, "ndim") and x.ndim == 2 and x.size >= min_size
+                and x.shape[0] % BLOCK == 0):
+            p, s = quantize(x)
+            return {"q4_packed": p, "q4_scales": s}
+        return x
+    return jax.tree.map(q, params)
+
+
+def quantized_bytes(shape: Tuple[int, int]) -> int:
+    K, N = shape
+    return K * N // 2 + (K // BLOCK) * N * 4

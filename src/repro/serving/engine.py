@@ -1,0 +1,146 @@
+"""Serving engine — the ArcLight decoding frontend (paper Fig 2, top).
+
+Handles weight loading, request scheduling, the prefill + autoregressive
+decode loop, and sampling, over the backend model zoo.  Requests are
+grouped into *length buckets* (equal prompt length ⇒ no padding waste —
+the batching discipline real CPU servers use), each bucket is prefilled
+once and decoded in lockstep with per-request completion tracking.
+
+jit boundaries: one compiled ``prefill`` per (bucket_size, prompt_len)
+and one compiled ``decode_step`` per bucket_size; the static cache
+length keeps decode XLA-stable across steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import Model
+from .sampler import SamplingParams, sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: List[int]
+    latency_s: float
+    prefill_s: float
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, *, max_len: int = 1024,
+                 cache_len: Optional[int] = None,
+                 window_override: Optional[int] = None,
+                 seed: int = 0) -> None:
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.cache_len = cache_len
+        self.window_override = window_override
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(
+                p, b, c, window_override=window_override))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(
+                p, c, t, pos, window_override=window_override))
+
+    # ------------------------------------------------------------------
+    def _buckets(self, requests: Sequence[Request],
+                 max_batch: int) -> List[List[Request]]:
+        by_len: Dict[int, List[Request]] = {}
+        for r in requests:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        buckets = []
+        for _, rs in sorted(by_len.items()):
+            for i in range(0, len(rs), max_batch):
+                buckets.append(rs[i:i + max_batch])
+        return buckets
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ------------------------------------------------------------------
+    def generate(self, requests: Sequence[Request], *,
+                 max_batch: int = 8) -> List[Completion]:
+        out: List[Completion] = []
+        for bucket in self._buckets(requests, max_batch):
+            out.extend(self._run_bucket(bucket))
+        return sorted(out, key=lambda c: c.uid)
+
+    def _run_bucket(self, bucket: List[Request]) -> List[Completion]:
+        model, params = self.model, self.params
+        B = len(bucket)
+        plen = len(bucket[0].prompt)
+        tokens = jnp.asarray([r.prompt for r in bucket], jnp.int32)
+        batch: Dict[str, Any] = {"tokens": tokens}
+        for k in bucket[0].extra:
+            batch[k] = jnp.asarray(
+                np.stack([np.asarray(r.extra[k]) for r in bucket]))
+        memory_len = 0
+        cache = model.init_cache(B, self.max_len, cache_len=self.cache_len,
+                                 memory_len=memory_len)
+
+        t0 = time.time()
+        logits, cache = self._prefill(params, batch, cache)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        max_new = max(r.sampling.max_new_tokens for r in bucket)
+        sp = bucket[0].sampling
+        done = np.zeros(B, bool)
+        generated: List[List[int]] = [[] for _ in range(B)]
+        cur = sample(logits, sp, self._next_key())
+        for step in range(max_new):
+            toks = np.asarray(cur[:, 0])
+            for b, r in enumerate(bucket):
+                if done[b]:
+                    continue
+                t = int(toks[b])
+                generated[b].append(t)
+                if ((r.sampling.eos_id is not None
+                     and t == r.sampling.eos_id)
+                        or len(generated[b]) >= r.sampling.max_new_tokens):
+                    done[b] = True
+            if done.all() or plen + step + 1 >= self.max_len:
+                break
+            logits, cache = self._decode(params, cache, cur,
+                                         jnp.asarray(plen + step))
+            cur = sample(logits, sp, self._next_key())
+        dt = time.time() - t0
+        return [Completion(uid=r.uid, prompt_len=plen,
+                           tokens=generated[b], latency_s=dt,
+                           prefill_s=t_prefill)
+                for b, r in enumerate(bucket)]
+
+
+def throughput_report(completions: Sequence[Completion]) -> Dict[str, float]:
+    total_new = sum(len(c.tokens) for c in completions)
+    wall = max(c.latency_s for c in completions)
+    return {
+        "requests": len(completions),
+        "new_tokens": total_new,
+        "wall_s": wall,
+        "decode_tok_per_s": total_new / max(wall - completions[0].prefill_s,
+                                            1e-9),
+        "prefill_tok_per_s": (sum(c.prompt_len for c in completions)
+                              / max(sum(c.prefill_s for c in completions),
+                                    1e-9)),
+    }

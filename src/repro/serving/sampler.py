@@ -1,0 +1,32 @@
+"""Token samplers: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0      # 0 -> greedy
+    top_k: int = 0                # 0 -> full distribution
+    max_new_tokens: int = 64
+    eos_id: Optional[int] = None
+
+
+def sample(logits: jax.Array, params: SamplingParams,
+           key: jax.Array) -> jax.Array:
+    """logits (B, 1, V) -> tokens (B, 1)."""
+    lf = logits[:, -1].astype(jnp.float32)
+    if params.temperature <= 0.0:
+        return jnp.argmax(lf, axis=-1, keepdims=True).astype(jnp.int32)
+    lf = lf / params.temperature
+    if params.top_k > 0:
+        vals, _ = jax.lax.top_k(lf, params.top_k)
+        kth = vals[:, -1:]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    tok = jax.random.categorical(key, lf, axis=-1)
+    return tok[:, None].astype(jnp.int32)

@@ -1,0 +1,94 @@
+"""Training loop: jit'd train_step factory + host-side driver."""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  Pure function — jit/pjit it at the call site with the
+    mesh shardings (see repro.launch).
+
+    ``microbatches > 1`` splits the batch and accumulates gradients
+    with a lax.scan — activation temporaries scale with the microbatch
+    size while the maths (and the per-step collective *bytes*) stay
+    identical.  The perf lever for train shapes whose activation
+    working set exceeds HBM (EXPERIMENTS.md §Perf, qwen2-72b)."""
+
+    def loss_fn(p, b):
+        loss, metrics = model.loss(p, b)
+        return loss, metrics
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Any]):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, b):
+                g_acc, l_acc = acc
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                    g_acc, g)
+                return (g_acc, l_acc + l / microbatches), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype),
+                                 grads, params)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step
+
+
+def train(model: Model, params, batches: Iterator[Dict[str, Any]],
+          opt_cfg: AdamWConfig, *, steps: int,
+          log_every: int = 10,
+          callback: Optional[Callable[[int, Dict], None]] = None,
+          ) -> Tuple[Any, AdamWState, list]:
+    """Host driver: single-process training for the examples/tests."""
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    opt_state = adamw_init(params)
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = next(batches)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = time.time() - t0
+            history.append(m)
+            if callback:
+                callback(step, m)
+    return params, opt_state, history

@@ -1,0 +1,13 @@
+"""Pytest config.
+
+NOTE: no XLA_FLAGS device-count forcing here — in-process tests must
+see the single real CPU device.  Multi-device behaviour is covered by
+subprocess tests (tests/test_tp_distributed.py).
+"""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess / multi-device tests (minutes)")

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned arch is instantiated as a REDUCED same-family variant
+(2 layers, d_model <= 512, <= 4 experts) and runs one forward + one
+train step on CPU, asserting output shapes and the absence of NaNs.
+The FULL configs are exercised only via the dry-run (see
+``repro.launch.dryrun``)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build_model, reduced_config
+from repro.training.loop import make_train_step
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+
+def _batch_for(cfg, B, S, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+    }
+    batch["labels"] = batch["tokens"]
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            ks[1], (B, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch_setup(request):
+    import dataclasses
+    cfg = reduced_config(get_config(request.param))
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32, remat=False,
+                              capacity_factor=4.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return request.param, cfg, model, params
+
+
+def test_reduced_limits(arch_setup):
+    name, cfg, model, params = arch_setup
+    assert cfg.n_layers <= max(len(cfg.block_pattern), 5) or cfg.n_layers <= 5
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+def test_forward_shapes_no_nan(arch_setup):
+    name, cfg, model, params = arch_setup
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any(), name
+    assert not np.isnan(float(aux)), name
+
+
+def test_one_train_step(arch_setup):
+    name, cfg, model, params = arch_setup
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S, jax.random.PRNGKey(2))
+    step = jax.jit(make_train_step(
+        model, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)))
+    new_params, opt_state, metrics = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(metrics["loss"])), name
+    assert np.isfinite(float(metrics["grad_norm"])), name
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)))
+    assert moved, f"{name}: train step did not update parameters"
+
+
+def test_prefill_decode_consistency(arch_setup):
+    name, cfg, model, params = arch_setup
+    B, S = 2, 10
+    batch = _batch_for(cfg, B, S, jax.random.PRNGKey(3))
+    logits, _ = model.forward(params, batch)
+    cache = model.init_cache(B, 24)
+    pl_logits, cache = model.prefill(params, batch, cache)
+    np.testing.assert_allclose(
+        np.asarray(pl_logits[:, 0], np.float32),
+        np.asarray(logits[:, -1], np.float32), rtol=2e-4, atol=2e-4)
+    tok = jnp.argmax(pl_logits, -1).astype(jnp.int32)
+    dl, cache = model.decode_step(params, cache, tok, jnp.asarray(S))
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    ext["labels"] = ext["tokens"]
+    fl, _ = model.forward(params, ext)
+    np.testing.assert_allclose(
+        np.asarray(dl[:, 0], np.float32),
+        np.asarray(fl[:, -1], np.float32), rtol=5e-3, atol=5e-3)

@@ -1,0 +1,131 @@
+"""Thread manager (§2.4) + Sync A/B (§3.4) + NUMA cost model (§3.1, §4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.numa import (KUNPENG_920_4NODE, QWEN3_4B,
+                             async_gain_tokens_per_s, decode_throughput,
+                             fig10_single_node, fig11_multi_node,
+                             fig12_13_long_prompt, headline_gain,
+                             prefill_throughput)
+from repro.core.threads import SyncSchedule, ThreadPool
+
+
+class TestThreadPool:
+    def test_distribute_binding(self):
+        pool = ThreadPool(8, n_nodes=4, binding="distribute")
+        assert pool.affinity == [0, 1, 2, 3, 0, 1, 2, 3]
+
+    def test_isolate_binding_packs(self):
+        pool = ThreadPool(8, n_nodes=4, binding="isolate")
+        assert pool.affinity == [0, 0, 1, 1, 2, 2, 3, 3]
+
+    def test_split_by_node_and_merge(self):
+        pool = ThreadPool(8, n_nodes=4)
+        groups = pool.split(4)
+        assert [g.node_id for g in groups] == [0, 1, 2, 3]
+        assert all(len(g) == 2 for g in groups)
+        g = pool.merge()
+        assert pool.n_groups == 1 and len(g) == 8
+
+    def test_group_of(self):
+        pool = ThreadPool(6, n_nodes=2)
+        pool.split(2)
+        assert pool.group_of(0).group_id != pool.group_of(1).group_id
+
+
+class TestSyncSchedules:
+    @given(st.lists(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=8),
+                    min_size=2, max_size=6).filter(
+                        lambda d: len({len(r) for r in d}) == 1))
+    @settings(max_examples=60, deadline=None)
+    def test_async_never_slower(self, durations):
+        """max-of-sums <= sum-of-maxes: Sync B always wins (Fig 9)."""
+        a = SyncSchedule.sync_a(durations)
+        b = SyncSchedule.sync_b(durations)
+        assert b.makespan <= a.makespan + 1e-9
+        assert b.global_barriers == 2
+        assert a.global_barriers == len(durations[0])
+
+    def test_skewed_groups_show_gain(self):
+        # one slow group per op, alternating -> big idle under Sync A
+        d = [[2.0, 0.5], [0.5, 2.0]]
+        assert SyncSchedule.speedup(d) == pytest.approx(4.0 / 2.5)
+
+    def test_uniform_no_gain(self):
+        d = [[1.0, 1.0], [1.0, 1.0]]
+        assert SyncSchedule.speedup(d) == pytest.approx(1.0)
+
+
+class TestNumaCostModel:
+    """The cost model must reproduce the paper's measured claims."""
+
+    def test_table1_bandwidth_matrix(self):
+        m = KUNPENG_920_4NODE.bandwidth_matrix()
+        assert m.shape == (4, 4)
+        assert np.all(np.diag(m) >= 100)              # local ~102 GB/s
+        off = m[~np.eye(4, dtype=bool)]
+        assert np.all((off >= 20) & (off <= 30))      # remote 22-26 GB/s
+        # ~4x local:remote gap (paper §3.1)
+        assert 3.5 <= np.diag(m).mean() / off.mean() <= 5.0
+
+    def test_headline_46_percent(self):
+        """'up to 46% higher inference throughput' at 4 nodes."""
+        g = headline_gain()
+        assert 0.40 <= g <= 0.52, g
+
+    def test_async_gain_about_5_toks(self):
+        """§3.4: asynchronous subgraphs contribute ≈ +5 tok/s."""
+        g = async_gain_tokens_per_s()
+        assert 2.0 <= g <= 8.0, g
+
+    def test_fig10_single_node_scaling_saturates(self):
+        f = fig10_single_node()
+        arc = f["arclight"]
+        assert arc[1] > arc[0] * 1.5          # scales at low threads
+        assert abs(arc[-1] - arc[-2]) < 0.2 * arc[-1]  # saturates
+        # ArcLight slightly above llama.cpp on one node (Fig 10)
+        assert f["arclight"][-1] > f["llama.cpp"][-1]
+
+    def test_fig11_tp_beats_distribute(self):
+        f = fig11_multi_node()
+        for n in (2, 4):
+            assert f["arclight_tp"][n][-1] > f["llama.cpp"][n][-1]
+        # gain grows with node count ("up to")
+        gain2 = f["arclight_tp"][2][-1] / f["llama.cpp"][2][-1]
+        gain4 = f["arclight_tp"][4][-1] / f["llama.cpp"][4][-1]
+        assert gain4 > gain2
+        # sync B > sync A everywhere TP is on
+        assert all(b >= a for b, a in
+                   zip(f["arclight_tp"][4], f["arclight_tp_sync_a"][4]))
+
+    def test_fig12_13_prefill_gain_less_than_decode(self):
+        """A.2: TP helps decode (bandwidth-bound) more than prefill
+        (compute-bound)."""
+        f = fig12_13_long_prompt()
+        decode_gain = (f["decode"]["arclight_tp"][4]
+                       / f["decode"]["llama.cpp"][4])
+        prefill_gain = (f["prefill"]["arclight_tp"][4]
+                        / f["prefill"]["llama.cpp"][4])
+        assert decode_gain > prefill_gain
+        assert prefill_gain >= 0.99           # never a regression
+
+    def test_remote_bytes_eliminated_by_tp(self):
+        llama = decode_throughput(QWEN3_4B, KUNPENG_920_4NODE, 192, 4,
+                                  "llama_uma_distribute")
+        arc = decode_throughput(QWEN3_4B, KUNPENG_920_4NODE, 192, 4,
+                                "arclight_numa_tp")
+        assert arc.remote_bytes < 0.02 * llama.remote_bytes
+
+    @given(st.integers(6, 48), st.sampled_from([1, 2, 4]))
+    @settings(max_examples=30, deadline=None)
+    def test_tp_never_loses_to_distribute(self, tpn, nodes):
+        t = tpn * nodes
+        a = decode_throughput(QWEN3_4B, KUNPENG_920_4NODE, t, nodes,
+                              "arclight_numa_tp" if nodes > 1
+                              else "arclight_single")
+        b = decode_throughput(QWEN3_4B, KUNPENG_920_4NODE, t, nodes,
+                              "llama_uma_distribute" if nodes > 1
+                              else "llama_uma_isolate")
+        assert a.tokens_per_s >= b.tokens_per_s * 0.98

@@ -1,0 +1,142 @@
+"""MoE dispatch, Mamba-2 SSD and RG-LRU: oracle equivalence + continuation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import init_moe, moe, moe_dense, moe_scatter
+from repro.models.recurrent import (RGLRUState, init_rglru_block,
+                                    rglru_block, rglru_scan, rglru_step)
+from repro.models.ssm import (ssd_chunked, ssd_decode_step, ssd_reference)
+
+
+class TestMoE:
+    @pytest.mark.parametrize("E,k", [(4, 1), (4, 2), (8, 2)])
+    def test_scatter_equals_dense_with_slack(self, E, k):
+        key = jax.random.PRNGKey(0)
+        d, f = 16, 32
+        p = init_moe(key, d, f, E, "silu", jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, d))
+        yd, auxd = moe_dense(p, x, k=k, act="silu")
+        ys, auxs = moe_scatter(p, x, k=k, act="silu", capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yd),
+                                   rtol=1e-4, atol=1e-5)
+        assert float(auxd) == pytest.approx(float(auxs), rel=1e-5)
+
+    def test_aux_loss_lower_bound(self):
+        """Load-balance loss >= 1 (perfectly balanced router)."""
+        p = init_moe(jax.random.PRNGKey(2), 8, 16, 4, "silu", jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(3), (64, 8))
+        _, aux = moe(p, x, k=2, act="silu", impl="dense")
+        assert float(aux) >= 0.95
+
+    @given(cf=st.floats(0.3, 1.0))
+    @settings(max_examples=10, deadline=None)
+    def test_capacity_drops_are_graceful(self, cf):
+        p = init_moe(jax.random.PRNGKey(4), 8, 16, 4, "silu", jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(5), (3, 11, 8))
+        y, _ = moe_scatter(p, x, k=2, act="silu", capacity_factor=cf)
+        assert not np.isnan(np.asarray(y)).any()
+
+    def test_gelu_experts(self):
+        p = init_moe(jax.random.PRNGKey(6), 8, 16, 4, "gelu", jnp.float32)
+        assert "w_gate" not in p
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 5, 8))
+        yd, _ = moe(p, x, k=2, act="gelu", impl="dense")
+        ys, _ = moe(p, x, k=2, act="gelu", impl="scatter",
+                    capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yd),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestSSD:
+    def _inputs(self, B, T, H, P, G, N, seed=0):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(B, T, H, P)).astype(np.float32)
+        dt = (np.abs(rng.normal(size=(B, T, H))) * 0.1 + 0.01
+              ).astype(np.float32)
+        A = -np.abs(rng.normal(size=(H,))).astype(np.float32)
+        Bm = (rng.normal(size=(B, T, G, N)) * 0.3).astype(np.float32)
+        Cm = (rng.normal(size=(B, T, G, N)) * 0.3).astype(np.float32)
+        return map(jnp.asarray, (x, dt, A, Bm, Cm))
+
+    @given(t=st.integers(3, 40), chunk=st.sampled_from([2, 4, 8, 16]),
+           g=st.sampled_from([1, 2]))
+    @settings(max_examples=20, deadline=None)
+    def test_chunked_equals_recurrent(self, t, chunk, g):
+        x, dt, A, Bm, Cm = self._inputs(1, t, 2 * g, 4, g, 8, seed=t)
+        y, st_ = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+        yr, str_ = ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_), np.asarray(str_),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_prefill_then_decode_continuation(self):
+        x, dt, A, Bm, Cm = self._inputs(2, 19, 4, 8, 2, 16)
+        y1, state = ssd_chunked(x[:, :10], dt[:, :10], A, Bm[:, :10],
+                                Cm[:, :10], chunk=4)
+        ys = []
+        for t in range(10, 19):
+            yt, state = ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                        Bm[:, t], Cm[:, t])
+            ys.append(np.asarray(yt))
+        yr, _ = ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.stack(ys, 1),
+                                   np.asarray(yr)[:, 10:],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_initial_state_threading(self):
+        x, dt, A, Bm, Cm = self._inputs(1, 16, 2, 4, 1, 8, seed=9)
+        _, s_half = ssd_chunked(x[:, :8], dt[:, :8], A, Bm[:, :8],
+                                Cm[:, :8], chunk=4)
+        y2, s_full = ssd_chunked(x[:, 8:], dt[:, 8:], A, Bm[:, 8:],
+                                 Cm[:, 8:], chunk=4, initial_state=s_half)
+        y_ref, s_ref = ssd_reference(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y2),
+                                   np.asarray(y_ref)[:, 8:],
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_ref),
+                                   rtol=1e-3, atol=1e-4)
+
+
+class TestRGLRU:
+    def test_scan_equals_stepwise(self):
+        p = init_rglru_block(jax.random.PRNGKey(0), 16, 24, 4, jnp.float32)
+        r = jax.random.normal(jax.random.PRNGKey(1), (2, 13, 24))
+        y_scan, hT = rglru_scan(p, r)
+        h = jnp.zeros((2, 24), jnp.float32)
+        ys = []
+        for t in range(13):
+            out, h = rglru_step(p, r[:, t], h)
+            ys.append(out)
+        np.testing.assert_allclose(np.asarray(y_scan),
+                                   np.asarray(jnp.stack(ys, 1)),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(h),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_block_continuation(self):
+        p = init_rglru_block(jax.random.PRNGKey(2), 16, 24, 4, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 16))
+        y_full, _ = rglru_block(p, x)
+        y1, state = rglru_block(p, x[:, :7])
+        outs = [np.asarray(y1)]
+        for t in range(7, 12):
+            yt, state = rglru_block(p, x[:, t:t + 1], state=state,
+                                    single_step=True)
+            outs.append(np.asarray(yt))
+        np.testing.assert_allclose(np.concatenate(outs, 1),
+                                   np.asarray(y_full), rtol=1e-5,
+                                   atol=1e-5)
+
+    @given(t=st.integers(2, 24))
+    @settings(max_examples=15, deadline=None)
+    def test_state_is_contraction(self, t):
+        """|a_t| < 1 => recurrence is stable (no state blow-up)."""
+        p = init_rglru_block(jax.random.PRNGKey(4), 8, 12, 4, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(t), (1, t, 8)) * 5.0
+        _, state = rglru_block(p, x)
+        assert np.all(np.isfinite(np.asarray(state.h)))

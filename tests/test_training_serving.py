@@ -1,0 +1,199 @@
+"""Training loop, optimizer, checkpointing, data pipeline, serving."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import PackedLMDataset, synth_corpus
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import ModelConfig, build_model
+from repro.serving.engine import Request, ServingEngine, throughput_report
+from repro.serving.sampler import SamplingParams, sample
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.loop import make_train_step, train
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      cosine_lr, global_norm)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestOptimizer:
+    def test_cosine_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+        lrs = [float(cosine_lr(cfg, jnp.asarray(s)))
+               for s in [0, 5, 10, 55, 100]]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert lrs[2] > lrs[3] > lrs[4]
+        assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+
+    @given(gscale=st.floats(0.1, 100.0))
+    @settings(max_examples=10, deadline=None)
+    def test_clipping_bounds_update(self, gscale):
+        params = {"w": jnp.ones((4, 4))}
+        grads = {"w": jnp.full((4, 4), gscale)}
+        cfg = AdamWConfig(lr=0.1, clip_norm=1.0, warmup_steps=0,
+                          total_steps=10, weight_decay=0.0)
+        state = adamw_init(params)
+        new, state, metrics = adamw_update(cfg, grads, state, params)
+        assert float(metrics["grad_norm"]) == pytest.approx(4 * gscale,
+                                                            rel=1e-4)
+        # post-clip grad norm <= 1 => first-step update magnitude ~ lr
+        delta = np.abs(np.asarray(new["w"] - params["w"])).max()
+        assert delta <= 0.11
+
+    def test_no_decay_on_vectors(self):
+        params = {"w": jnp.ones((4, 4)), "g": jnp.ones((4,))}
+        grads = {"w": jnp.zeros((4, 4)), "g": jnp.zeros((4,))}
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.5, warmup_steps=0,
+                          total_steps=10, clip_norm=1e9)
+        new, _, _ = adamw_update(cfg, grads, adamw_init(params), params)
+        assert np.asarray(new["w"]).max() < 1.0    # decayed
+        np.testing.assert_allclose(np.asarray(new["g"]), 1.0)  # not
+
+
+class TestTraining:
+    def test_loss_decreases(self, tiny):
+        cfg, model, params = tiny
+        ds = PackedLMDataset(seq_len=32, n_docs=300,
+                             vocab_size=cfg.vocab_size)
+        _, _, hist = train(model, params, ds.batches(8),
+                           AdamWConfig(lr=1e-3, warmup_steps=5,
+                                       total_steps=40),
+                           steps=40, log_every=10)
+        assert hist[-1]["loss"] < hist[0]["loss"] * 0.9
+
+    def test_chunked_loss_matches_dense_ce(self, tiny):
+        """The chunked CE must equal naive full-logit CE."""
+        cfg, model, params = tiny
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 19), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        loss, metrics = model.loss(params, batch)
+        logits, _ = model.forward(params, batch)
+        lf = np.asarray(logits, np.float32)
+        logz = np.log(np.exp(lf - lf.max(-1, keepdims=True)).sum(-1)) \
+            + lf.max(-1)
+        gold = np.take_along_axis(lf, np.asarray(tokens)[..., None],
+                                  -1)[..., 0]
+        want = float((logz - gold).mean())
+        assert float(metrics["ce"]) == pytest.approx(want, rel=1e-4)
+
+    def test_remat_matches_no_remat(self):
+        import dataclasses
+        cfg = ModelConfig(name="r", arch_type="dense", n_layers=2,
+                          d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                          vocab_size=64, dtype=jnp.float32)
+        m1 = build_model(cfg)
+        m2 = build_model(dataclasses.replace(cfg, remat=True))
+        params = m1.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+        batch = {"tokens": tokens, "labels": tokens}
+        g1 = jax.grad(lambda p: m1.loss(p, batch)[0])(params)
+        g2 = jax.grad(lambda p: m2.loss(p, batch)[0])(params)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tiny, tmp_path):
+        cfg, model, params = tiny
+        opt = adamw_init(params)
+        path = str(tmp_path / "ck")
+        save_checkpoint(path, 7, {"params": params, "opt": opt})
+        step, out = load_checkpoint(path, {"params": params, "opt": opt})
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(out["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestData:
+    def test_packing_no_waste(self):
+        ds = PackedLMDataset(seq_len=64, n_docs=100)
+        row = ds.row(0)
+        assert row["tokens"].shape == (64,)
+        # labels are next-token shifted
+        np.testing.assert_array_equal(ds.row(0)["labels"][:-1],
+                                      ds.row(0)["tokens"][1:])
+
+    def test_tokenizer_roundtrip(self):
+        tok = ByteTokenizer()
+        s = "the scheduler binds local memory."
+        assert tok.decode(tok.encode(s)) == s
+
+    def test_deterministic(self):
+        a = synth_corpus(10, seed=3)
+        b = synth_corpus(10, seed=3)
+        assert a == b
+
+
+class TestServing:
+    def test_greedy_matches_forward_argmax(self, tiny):
+        """The engine's first sampled token == argmax of full forward."""
+        cfg, model, params = tiny
+        prompt = [1, 2, 3, 4, 5]
+        eng = ServingEngine(model, params, max_len=32)
+        comps = eng.generate([Request(uid=0, prompt=prompt,
+                                      sampling=SamplingParams(
+                                          max_new_tokens=1))])
+        batch = {"tokens": jnp.asarray([prompt]),
+                 "labels": jnp.asarray([prompt])}
+        logits, _ = model.forward(params, batch)
+        want = int(jnp.argmax(logits[0, -1]))
+        assert comps[0].tokens[0] == want
+
+    def test_bucketing_by_length(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, max_len=32)
+        reqs = [Request(uid=i, prompt=[1] * (3 + i % 2),
+                        sampling=SamplingParams(max_new_tokens=2))
+                for i in range(6)]
+        buckets = eng._buckets(reqs, max_batch=2)
+        assert all(len({len(r.prompt) for r in b}) == 1 for b in buckets)
+        assert all(len(b) <= 2 for b in buckets)
+        comps = eng.generate(reqs, max_batch=2)
+        assert [c.uid for c in comps] == list(range(6))
+
+    def test_eos_stops(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, max_len=64)
+        batch = {"tokens": jnp.asarray([[1, 2, 3]]),
+                 "labels": jnp.asarray([[1, 2, 3]])}
+        logits, _ = model.forward(params, batch)
+        eos = int(jnp.argmax(logits[0, -1]))  # force eos == first token
+        comps = eng.generate([Request(
+            uid=0, prompt=[1, 2, 3],
+            sampling=SamplingParams(max_new_tokens=16, eos_id=eos))])
+        assert len(comps[0].tokens) == 1
+
+    def test_sampler_top_k(self):
+        logits = jnp.asarray([[[0.0, 1.0, 2.0, 3.0]]])
+        for seed in range(5):
+            t = sample(logits, SamplingParams(temperature=1.0, top_k=2),
+                       jax.random.PRNGKey(seed))
+            assert int(t[0, 0]) in (2, 3)
+
+    def test_throughput_report(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, max_len=32)
+        comps = eng.generate([Request(uid=0, prompt=[1, 2, 3],
+                                      sampling=SamplingParams(
+                                          max_new_tokens=4))])
+        rep = throughput_report(comps)
+        assert rep["new_tokens"] == 4 and rep["requests"] == 1

@@ -1,0 +1,35 @@
+"""Render EXPERIMENTS.md tables from the dry-run sweep JSONs."""
+
+import json
+import sys
+
+
+def table(path, title):
+    d = json.load(open(path))
+    out = [f"### {title}", ""]
+    out.append("| arch | shape | note | compute_s | memory_s | coll_s | "
+               "dominant | useful | GiB/dev | compile_s |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in d["results"]:
+        gib = (r["bytes_per_device"] or 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('note','') or '-'} | "
+            f"{r['t_compute']:.2e} | {r['t_memory']:.2e} | "
+            f"{r['t_collective']:.2e} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | {gib:.2f} | "
+            f"{r.get('compile_s', 0):.0f} |")
+    for f in d.get("failures", []):
+        out.append(f"| {f['arch']} | {f['shape']} | FAILED | | | | | | | |")
+    n_ok = len(d["results"])
+    n_fail = len(d.get("failures", []))
+    out.append("")
+    out.append(f"*{n_ok} compiled OK, {n_fail} failed.*")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table("experiments/dryrun_single_pod.json",
+                "Single-pod mesh 16×16 (256 chips) — baseline"))
+    print()
+    print(table("experiments/dryrun_multi_pod.json",
+                "Multi-pod mesh 2×16×16 (512 chips) — baseline"))
