@@ -75,8 +75,8 @@ def serving_rows() -> List[Row]:
 def syncab_rows() -> List[Row]:
     """Collective-op counts: Sync A inserts one all-gather per op."""
     from repro.core import tp
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("model",))
     rng = np.random.default_rng(0)
     d, f, t = 32, 64, 4
     params = {k: (rng.normal(size=s) * 0.1).astype(np.float32)

@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV.  Sections:
   numa_sim       Table 1, Figs 10/11/9/12/13, headline claims
   engine_bench   ArcLight engine + serving frontend + Sync A/B
+  serving_bench  bucket vs continuous-batching engines, Poisson arrivals
   kernels_bench  Q4_0 GEMM + decode attention kernels
   roofline_bench per-(arch x shape) dominant roofline terms
 """
@@ -14,9 +15,11 @@ import traceback
 
 
 def main() -> None:
-    from . import engine_bench, kernels_bench, numa_sim, roofline_bench
+    from . import (engine_bench, kernels_bench, numa_sim, roofline_bench,
+                   serving_bench)
     print("name,us_per_call,derived")
-    for mod in (numa_sim, engine_bench, kernels_bench, roofline_bench):
+    for mod in (numa_sim, engine_bench, serving_bench, kernels_bench,
+                roofline_bench):
         try:
             for name, us, derived in mod.all_rows():
                 print(f"{name},{us:.1f},{derived}")

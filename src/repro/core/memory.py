@@ -81,6 +81,7 @@ class MemoryManager:
         self.double_buffer = double_buffer
         self.weight_pools: List[Pool] = []
         self.act_pools: List[List[Pool]] = []  # [node][parity]
+        self.kv_pools: List[Pool] = []         # populated by plan_kv_pages
         if self.numa:
             for i in range(n_nodes):
                 self.weight_pools.append(Pool(f"weights/node{i}", i))
@@ -147,6 +148,41 @@ class MemoryManager:
         return plan
 
     # ------------------------------------------------------------------
+    # KV-cache page pools (serving)
+    # ------------------------------------------------------------------
+    def plan_kv_pages(self, n_pages: int, page_bytes: int,
+                      ) -> List[Allocation]:
+        """Carve the serving KV cache into fixed-size pages, one carve-out
+        per page, striped round-robin across the node pools.
+
+        The paged KV pool (``repro.serving.kv_pool``) is the runtime
+        allocator on top of this plan: a page's *placement* (node, pool
+        offset) is decided here at startup, exactly like weights and
+        activations, while which *sequence* owns the page changes at
+        runtime without moving bytes — ArcLight's pre-allocate-then-bind
+        discipline (§2.3) applied to the serving cache.  Returns the
+        per-page allocations indexed by page id.
+        """
+        if self.kv_pools:
+            raise ValueError("KV pages already planned")
+        if self.numa:
+            self.kv_pools = [Pool(f"kv/node{i}", i)
+                             for i in range(self.n_nodes)]
+        else:
+            self.kv_pools = [Pool("kv/uma", None)]
+        allocs = []
+        for pid in range(n_pages):
+            pool = self.kv_pools[pid % len(self.kv_pools)]
+            allocs.append(pool.alloc(f"kv_page{pid}", page_bytes))
+        return allocs
+
+    def kv_page_node(self, page_id: int) -> int:
+        """NUMA node a planned page is resident on (0 under UMA)."""
+        if not self.kv_pools:
+            raise ValueError("no KV pages planned")
+        return self.kv_pools[page_id % len(self.kv_pools)].node_id or 0
+
+    # ------------------------------------------------------------------
     # accounting
     # ------------------------------------------------------------------
     def weight_bytes(self) -> Dict[str, int]:
@@ -155,9 +191,13 @@ class MemoryManager:
     def activation_bytes(self) -> Dict[str, int]:
         return {p.name: p.peak for pools in self.act_pools for p in pools}
 
+    def kv_bytes(self) -> Dict[str, int]:
+        return {p.name: p.peak for p in self.kv_pools}
+
     def total_bytes(self) -> int:
         return (sum(self.weight_bytes().values())
-                + sum(self.activation_bytes().values()))
+                + sum(self.activation_bytes().values())
+                + sum(self.kv_bytes().values()))
 
     def per_node_bytes(self) -> Dict[int, int]:
         """Bytes resident in each node's local memory."""
@@ -167,6 +207,8 @@ class MemoryManager:
         for pools in self.act_pools:
             for p in pools:
                 out[p.node_id or 0] = out.get(p.node_id or 0, 0) + p.peak
+        for p in self.kv_pools:
+            out[p.node_id or 0] = out.get(p.node_id or 0, 0) + p.peak
         return out
 
 

@@ -104,3 +104,104 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, H, G, D), jnp.float32),
         interpret=interpret,
     )(kv_len, q, k, v)
+
+
+# ----------------------------------------------------------------------
+# paged variant: K/V live in a shared page pool, read through per-
+# sequence block tables (the serving KV pool's device layout)
+# ----------------------------------------------------------------------
+
+def _paged_decode_attn_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref,
+                              o_ref, acc_ref, m_ref, l_ref, *,
+                              page_size: int, n_pages: int, scale: float,
+                              softcap: float):
+    p_idx = pl.program_id(2)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (ps, D) — one page
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kv_len = len_ref[b]
+    window = win_ref[0]
+    # logical (not physical) positions of this page's slots
+    kpos = p_idx * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    mask = kpos < kv_len
+    mask &= (window <= 0) | (kpos > kv_len - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(p_idx == n_pages - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = acc_ref[...] / l
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           kv_lens: jax.Array, window=0, *,
+                           softcap: float = 0.0,
+                           interpret: bool = True) -> jax.Array:
+    """q (B,H,G,D) × page pool k,v (P,ps,H,D) -> out (B,H,G,D) f32.
+
+    ``block_tables`` (B, max_pages) int32 and ``kv_lens`` (B,) int32 are
+    scalar-prefetched so each grid step's BlockSpec index_map can DMA the
+    *physical* page the sequence's logical page j maps to — the gather
+    never materialises a contiguous copy of the sequence's cache.
+    """
+    B, H, G, D = q.shape
+    P, page_size, _, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    kv_lens = jnp.asarray(kv_lens, jnp.int32).reshape(B)
+    window = jnp.asarray(window, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_paged_decode_attn_kernel,
+                               page_size=page_size, n_pages=max_pages,
+                               scale=scale, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,        # block tables, kv lens, window
+        grid=(B, H, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, p, bt, ln, w: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, D),
+                         lambda b, h, p, bt, ln, w: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, D),
+                         lambda b, h, p, bt, ln, w: (bt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, bt, ln, w: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, G, D), jnp.float32),
+        interpret=interpret,
+    )(block_tables, kv_lens, window, q, k_pages, v_pages)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .decode_attention import decode_attention as _decode_attention_kernel
+from .decode_attention import \
+    paged_decode_attention as _paged_decode_attention_kernel
 from .q4_gemm import q4_gemm as _q4_gemm_kernel
 from .rglru_scan import rglru_scan_kernel as _rglru_scan_kernel
 
@@ -52,6 +54,37 @@ def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out = _decode_attention_kernel(qk, k, v, kv_len, block_s=block_s,
                                        interpret=not _on_tpu())
     return out.reshape(B, 1, Hq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "softcap"))
+def paged_gqa_decode_attention(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               kv_lens: jax.Array, window=0, *,
+                               softcap: float = 0.0,
+                               impl: str = "auto") -> jax.Array:
+    """Paged flash-decoding for one token per sequence with GQA.
+
+    q (B,1,Hq,D); k_pages,v_pages (P,ps,Hkv,D) shared page pool;
+    block_tables (B,max_pages); kv_lens (B,) -> out (B,1,Hq,D).  The
+    device-side read path of the serving KV pool
+    (``repro.serving.kv_pool``): K/V are addressed *through* the block
+    table, so batch membership and sequence length change without
+    recompilation or cache copies.
+    """
+    B, one, Hq, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = Hq // Hkv
+    qk = q.reshape(B, Hkv, G, D)
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        out = _ref.paged_decode_attention_ref(qk, k_pages, v_pages,
+                                              block_tables, kv_lens, window,
+                                              softcap=softcap)
+    else:
+        out = _paged_decode_attention_kernel(qk, k_pages, v_pages,
+                                             block_tables, kv_lens, window,
+                                             softcap=softcap,
+                                             interpret=not _on_tpu())
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_t"))

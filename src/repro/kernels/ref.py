@@ -31,6 +31,44 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
 
 
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               kv_lens: jax.Array,
+                               window=0, softcap: float = 0.0) -> jax.Array:
+    """Gather-based paged flash-decoding oracle.
+
+    q (B,H,G,D) one token per sequence; k_pages/v_pages (P,ps,H,D) the
+    shared physical page pool; block_tables (B,max_pages) maps each
+    sequence's logical page j to a physical page id; kv_lens (B,) is the
+    per-sequence token count (logical positions are contiguous 0..len-1,
+    unlike the ring cache).  Fully-masked rows (kv_len == 0, idle batch
+    slots) produce finite garbage, not NaN.
+    """
+    B, H, G, D = q.shape
+    P, ps, _, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    L = max_pages * ps
+    scale = 1.0 / math.sqrt(D)
+    # gather each sequence's pages, flatten to its logical KV view
+    k = k_pages[block_tables].reshape(B, L, H, D)
+    v = v_pages[block_tables].reshape(B, L, H, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    j = jnp.arange(L)
+    valid = j[None, :] < kv_lens[:, None]
+    w = jnp.asarray(window, jnp.int32)
+    qpos = kv_lens[:, None] - 1
+    valid &= (w <= 0) | (j[None, :] > qpos - w)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+
+
 def rglru_scan_ref(a: jax.Array, u: jax.Array, h0=None) -> jax.Array:
     """Associative-scan oracle for the RG-LRU recurrence kernel."""
     if h0 is not None:

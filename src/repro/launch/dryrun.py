@@ -52,6 +52,8 @@ def run_case(arch: str, shape: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {}
     if verbose:
         print(f"== {arch} x {shape} x {mesh_name} "
               f"(compile {t_compile:.1f}s, note={case.note or '-'})")

@@ -130,15 +130,29 @@ def _local_cost(lines: List[str]) -> CompCost:
                 continue
             out_numel = _numel(out_shapes[0][1])
             cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
-            lhs_m = re.search(r"dot\(\s*%([\w.\-]+)", rhs)
+            # HLO dumps either inline the operand type
+            # (``dot(f32[64,64]{1,0} %x, ...)``) or just name it
+            # (``dot(%x, ...)``) — prefer the inline shape, fall back to
+            # the definition table
+            dims: List[int] = []
+            inline = re.search(r"dot\(\s*([a-z0-9]+\[[\d,]*\])", rhs)
+            if inline:
+                ps = _parse_shapes(inline.group(1))
+                if ps:
+                    dims = ps[0][1]
+            if not dims:
+                lhs_m = re.search(
+                    r"dot\(\s*(?:[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?\s+)?"
+                    r"%([\w.\-]+)", rhs)
+                if lhs_m and lhs_m.group(1) in shapes:
+                    lhs_shapes = _parse_shapes(shapes[lhs_m.group(1)])
+                    if lhs_shapes:
+                        dims = lhs_shapes[0][1]
             contracted = 1
-            if cd and lhs_m and lhs_m.group(1) in shapes:
-                lhs_shapes = _parse_shapes(shapes[lhs_m.group(1)])
-                if lhs_shapes:
-                    dims = lhs_shapes[0][1]
-                    for idx in cd.group(1).split(","):
-                        if idx and int(idx) < len(dims):
-                            contracted *= dims[int(idx)]
+            if cd and dims:
+                for idx in cd.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        contracted *= dims[int(idx)]
             cost.flops += 2.0 * out_numel * contracted
         elif opname in ("convolution",):
             # rough: 2 * out_numel * (kernel numel / out_channels)

@@ -15,14 +15,29 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 has explicit mesh axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every axis is implicitly Auto
+    AxisType = None
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported.
+
+    Single compat point for the whole repo — older jax releases have no
+    ``axis_types`` kwarg (all axes behave as Auto there anyway)."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int = 1) -> Mesh:
@@ -31,8 +46,7 @@ def make_host_mesh(model: int = 1, data: int = 1) -> Mesh:
     n = len(jax.devices())
     model = min(model, n)
     data = max(min(data, n // model), 1)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:

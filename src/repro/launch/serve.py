@@ -5,8 +5,15 @@ architecture (CPU host), optionally warm-trains it briefly so greedy
 output isn't pure noise, then serves a batch of byte-level prompts and
 prints the throughput report (the paper's §4 measurement protocol).
 
+``--engine bucket`` (default) is the sequential length-bucket baseline;
+``--engine continuous`` runs the paged-KV continuous-batching engine
+(uniform self-attention archs only — the paged cache has no recurrent/
+cross-attention state yet).
+
 Examples:
     python -m repro.launch.serve --arch gemma3-1b --max-new 24
+    python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \\
+        --max-running 4 --page-size 16
     python -m repro.launch.serve --arch recurrentgemma-2b \\
         --prompt "the scheduler binds" --temperature 0.7
 """
@@ -26,6 +33,15 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--engine", choices=("bucket", "continuous"),
+                    default="bucket")
+    ap.add_argument("--max-running", type=int, default=4,
+                    help="continuous engine: running-batch slots")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="continuous engine: KV page token slots")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="continuous engine: KV pool pages "
+                         "(default: no-preemption sizing)")
     ap.add_argument("--warmup-steps", type=int, default=40,
                     help="brief LM warm-up so outputs aren't noise "
                          "(0 = random weights)")
@@ -40,7 +56,8 @@ def main() -> int:
         stub_image_embeds
     from ..data.tokenizer import ByteTokenizer
     from ..models import build_model, reduced_config
-    from ..serving.engine import Request, ServingEngine, throughput_report
+    from ..serving import (ContinuousServingEngine, Request, ServingEngine,
+                           throughput_report)
     from ..serving.sampler import SamplingParams
     from ..training.loop import train
     from ..training.optimizer import AdamWConfig
@@ -90,13 +107,18 @@ def main() -> int:
                 1, cfg.n_image_tokens, cfg.d_model)[0]
         reqs.append(Request(uid=i, prompt=tok.encode(p), sampling=sp,
                             extra=extra))
-    eng = ServingEngine(model, params,
-                        max_len=max(len(r.prompt) for r in reqs)
-                        + args.max_new + 8)
-    comps = eng.generate(reqs, max_batch=args.max_batch)
+    max_len = max(len(r.prompt) for r in reqs) + args.max_new + 8
+    if args.engine == "continuous":
+        eng = ContinuousServingEngine(
+            model, params, max_len=max_len, max_running=args.max_running,
+            page_size=args.page_size, n_pages=args.n_pages)
+        comps = eng.generate(reqs)
+    else:
+        eng = ServingEngine(model, params, max_len=max_len)
+        comps = eng.generate(reqs, max_batch=args.max_batch)
     for c, p in zip(comps, prompts):
         print(f"[{c.uid}] {p!r} -> {tok.decode(c.tokens)!r}")
-    rep = throughput_report(comps)
+    rep = throughput_report(comps, **eng.last_phase_s)
     print("throughput:", {k: round(v, 2) if isinstance(v, float) else v
                           for k, v in rep.items()})
     return 0

@@ -22,6 +22,12 @@ explicit per-slot absolute-position array used for masking.  With
 ``cache_len == max_len`` this degenerates to the ordinary linear cache;
 with ``cache_len == window`` it is the sliding-window cache used for
 the long_500k shapes (DESIGN.md §4).
+
+``init_cache(page_size=...)`` instead builds the **paged** cache for
+the continuous-batching engine: a shared physical page pool addressed
+through per-slot block tables, with ``prefill_paged`` /
+vector-position ``decode_step`` as the compiled entry points (see
+``init_cache`` and ``repro.serving.kv_pool`` for the layout).
 """
 
 from __future__ import annotations
@@ -197,10 +203,46 @@ def _remat_policy(cfg: ModelConfig):
     return jax.checkpoint_policies.nothing_saveable
 
 
+def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+                window: jax.Array, cache: Dict[str, jax.Array],
+                paged: Dict[str, Any],
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Slot-mapped cache write + block-table attention read.
+
+    ``cache['k']/['v']`` are flat views of the shared physical page pool
+    ((n_pages * page_size, Hkv, D)); ``paged`` carries the per-call slot
+    mapping (see ``Model.init_cache`` docstring).  Prefill (S > 1)
+    scatters the fresh K/V rows to their physical slots and attends over
+    the fresh K/V directly (the cache was empty, identical maths);
+    decode (S == 1) scatters one row per sequence and attends through
+    the block table with the gather-based paged kernel.
+    """
+    from ..kernels.ops import paged_gqa_decode_attention
+    B, S = q.shape[:2]
+    ps = paged["page_size"]
+    write_slots = paged["write_slots"]
+    if S > 1:                                 # prefill: one sequence
+        ck = cache["k"].at[write_slots].set(k[0])
+        cv = cache["v"].at[write_slots].set(v[0])
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              chunk=ATTN_CHUNK,
+                              softcap=cfg.attn_logit_softcap)
+    else:                                     # decode: one token per slot
+        ck = cache["k"].at[write_slots].set(k[:, 0])
+        cv = cache["v"].at[write_slots].set(v[:, 0])
+        n_pages = ck.shape[0] // ps
+        kp = ck.reshape(n_pages, ps, *ck.shape[1:])
+        vp = cv.reshape(n_pages, ps, *cv.shape[1:])
+        out = paged_gqa_decode_attention(
+            q, kp, vp, paged["block_tables"], paged["kv_len"], window,
+            softcap=cfg.attn_logit_softcap)
+    return out, {"k": ck, "v": cv}
+
+
 def _self_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
                positions: jax.Array, theta: jax.Array, window: jax.Array,
                cache: Optional[Dict[str, jax.Array]], *, causal: bool,
-               decode_hook=None, act_constraint=None,
+               decode_hook=None, act_constraint=None, paged=None,
                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     B, S, d = x.shape
     q, k, v = _project_qkv(cfg, ap, x, x)
@@ -213,7 +255,9 @@ def _self_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
     q = _rope(cfg, q, positions, theta)
     k = _rope(cfg, k, positions, theta)
     new_cache = None
-    if cache is not None and decode_hook is not None and S == 1:
+    if cache is not None and paged is not None:
+        out, new_cache = _paged_attn(cfg, q, k, v, window, cache, paged)
+    elif cache is not None and decode_hook is not None and S == 1:
         # sequence-sharded flash-decoding with local cache write
         # (launcher-installed; see launch.shardings.make_decode_attn_hook)
         out, ck, cv, cp = decode_hook(q, k, v, cache["k"], cache["v"],
@@ -295,7 +339,7 @@ def _layer_forward(cfg: ModelConfig, kind: str, lp: Params, x: jax.Array,
                    memory: Optional[Dict[str, jax.Array]], *,
                    causal: bool, decoder_cross: bool = False,
                    single_step: bool = False, moe_hook=None,
-                   decode_hook=None, act_constraint=None,
+                   decode_hook=None, act_constraint=None, paged=None,
                    ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
     """One block. Returns (x_out, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -305,7 +349,7 @@ def _layer_forward(cfg: ModelConfig, kind: str, lp: Params, x: jax.Array,
         a, kv = _self_attn(cfg, lp["attn"], h, positions, theta, window,
                            None if cache is None else cache.get("self"),
                            causal=causal, decode_hook=decode_hook,
-                           act_constraint=act_constraint)
+                           act_constraint=act_constraint, paged=paged)
         # post-Gather activations are remat save-points: recomputing
         # them would repeat the TP psum in the backward pass
         x = x + checkpoint_name(a, "block_out")
@@ -467,9 +511,55 @@ class Model:
 
     def init_cache(self, batch: int, max_len: int, *,
                    cache_len: Optional[int] = None,
-                   memory_len: int = 0) -> Dict[str, Any]:
-        """Zero cache.  ``cache_len`` < max_len -> sliding ring buffer."""
+                   memory_len: int = 0,
+                   page_size: Optional[int] = None,
+                   n_pages: Optional[int] = None) -> Dict[str, Any]:
+        """Zero cache.  ``cache_len`` < max_len -> sliding ring buffer.
+
+        ``page_size`` switches to the **paged slot/block-table view**
+        used by the continuous-batching engine: instead of one dense
+        (batch, cache_len) ring per sequence, all sequences share one
+        physical pool of ``n_pages`` fixed-size pages per layer and are
+        addressed through it —
+
+        * ``layers..k/v``  (n_pages * page_size, Hkv, D) flat page pool
+          (page 0 is reserved scratch: idle batch slots and padded
+          prefill positions write there);
+        * ``block_tables`` (batch, ceil(max_len / page_size)) int32 —
+          physical page of each sequence's logical page, 0 = unmapped.
+          Owned by the host-side allocator (``repro.serving.kv_pool``),
+          overwritten between steps without touching K/V bytes.
+
+        Per-slot lengths are host state (the scheduler's), passed into
+        each call as the position vector — the paged cache carries no
+        device-side length array.
+
+        Here ``batch`` is the number of *slots* of the running batch —
+        which request occupies a slot changes step to step (join/evict)
+        with no shape change, hence no recompilation.
+        """
         cfg = self.cfg
+        if page_size is not None:
+            if not (self.uniform and self.kinds[0] == "attn"
+                    and not self.decoder_cross and not cfg.cross_attn_every):
+                raise NotImplementedError(
+                    "paged KV cache requires a uniform self-attention "
+                    f"stack (arch {cfg.name!r} has kinds {self.kinds[:4]})")
+            max_pages = -(-max_len // page_size)
+            if n_pages is None:
+                n_pages = 1 + batch * max_pages   # page 0 is scratch
+            hd = cfg.resolved_head_dim
+            pool = {"self": {
+                "k": jnp.zeros((n_pages * page_size, cfg.n_kv_heads, hd),
+                               cfg.dtype),
+                "v": jnp.zeros((n_pages * page_size, cfg.n_kv_heads, hd),
+                               cfg.dtype)}}
+            return {
+                "block_tables": jnp.zeros((batch, max_pages), jnp.int32),
+                "layers": jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (cfg.n_layers,) + x.shape).copy(), pool),
+            }
         cl = min(cache_len or max_len, max_len)
         cache: Dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
         if self.uniform:
@@ -511,7 +601,7 @@ class Model:
                      positions: jax.Array, caches: Optional[Params],
                      memory: Optional[jax.Array], *, causal: bool,
                      single_step: bool, window_override: Optional[int],
-                     decoder_cross: bool, kind: str,
+                     decoder_cross: bool, kind: str, paged=None,
                      ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
         cfg = self.cfg
         windows, thetas = self._stack_meta()
@@ -522,7 +612,7 @@ class Model:
             _layer_forward, cfg, kind, causal=causal,
             decoder_cross=decoder_cross, single_step=single_step,
             moe_hook=self.moe_hook, decode_hook=self.decode_attn_hook,
-            act_constraint=self.attn_act_constraint)
+            act_constraint=self.attn_act_constraint, paged=paged)
         if cfg.remat and caches is None:   # checkpoint each layer (train)
             fwd = jax.checkpoint(fwd, policy=_remat_policy(cfg))
 
@@ -557,6 +647,7 @@ class Model:
     def _run_blocks(self, layers: Params, x: jax.Array,
                     positions: jax.Array, caches, memory, *, causal: bool,
                     single_step: bool, window_override: Optional[int],
+                    paged=None,
                     ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
         """Scan over super-blocks of a periodic pattern (see __init__)."""
         cfg = self.cfg
@@ -575,7 +666,7 @@ class Model:
         fwd = functools.partial(
             _layer_forward, cfg, causal=causal, single_step=single_step,
             moe_hook=self.moe_hook, decode_hook=self.decode_attn_hook,
-            act_constraint=self.attn_act_constraint)
+            act_constraint=self.attn_act_constraint, paged=paged)
 
         def block_body(carry, xs):
             h, aux = carry
@@ -635,6 +726,7 @@ class Model:
                      positions: jax.Array, caches: Optional[List],
                      memory: Optional[jax.Array], *, causal: bool,
                      single_step: bool, window_override: Optional[int],
+                     paged=None,
                      ) -> Tuple[jax.Array, Optional[List], jax.Array]:
         cfg = self.cfg
         windows = cfg.layer_windows(0)
@@ -651,7 +743,7 @@ class Model:
                 _layer_forward, cfg, kind, causal=causal,
                 single_step=single_step, moe_hook=self.moe_hook,
                 decode_hook=self.decode_attn_hook,
-                act_constraint=self.attn_act_constraint)
+                act_constraint=self.attn_act_constraint, paged=paged)
             if cfg.remat and caches is None:   # per-layer remat (train)
                 fwd = jax.checkpoint(fwd)
             x, nc, a = fwd(
@@ -666,22 +758,23 @@ class Model:
     def _run_layers(self, params: Params, x: jax.Array,
                     positions: jax.Array, caches, memory, *, causal: bool,
                     single_step: bool = False,
-                    window_override: Optional[int] = None):
+                    window_override: Optional[int] = None, paged=None):
         if self.uniform:
             return self._run_uniform(
                 params["layers"], x, positions, caches, memory,
                 causal=causal, single_step=single_step,
                 window_override=window_override,
-                decoder_cross=self.decoder_cross, kind=self.kinds[0])
+                decoder_cross=self.decoder_cross, kind=self.kinds[0],
+                paged=paged)
         if self.block_period:
             return self._run_blocks(
                 params["layers"], x, positions, caches, memory,
                 causal=causal, single_step=single_step,
-                window_override=window_override)
+                window_override=window_override, paged=paged)
         return self._run_pattern(
             params["layers"], x, positions, caches, memory,
             causal=causal, single_step=single_step,
-            window_override=window_override)
+            window_override=window_override, paged=paged)
 
     def _encode(self, params: Params, frames: jax.Array) -> jax.Array:
         """Whisper-style encoder over stub frame embeddings (B, F, d)."""
@@ -804,11 +897,62 @@ class Model:
             new_cache["memory"] = memory
         return self._logits(params, x[:, -1:]), new_cache
 
+    def prefill_paged(self, params: Params, batch: Dict[str, Any],
+                      cache: Dict[str, Any], slot: jax.Array,
+                      plen: jax.Array, *, page_size: int,
+                      window_override: Optional[int] = None,
+                      ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Prefill ONE sequence into batch slot ``slot`` of a paged cache.
+
+        ``batch['tokens']`` is (1, Sp) right-padded to any convenient
+        bucket length; ``plen`` (traced scalar) is the real prompt
+        length, so one compilation per Sp serves every shorter prompt.
+        K/V rows land in the physical pages ``cache['block_tables'][slot]``
+        maps (padded positions fall through unmapped entries to the
+        scratch page).  Returns logits of the *last real* token.
+        """
+        tokens = batch["tokens"]
+        Sp = tokens.shape[1]
+        slot = jnp.asarray(slot, jnp.int32)
+        plen = jnp.asarray(plen, jnp.int32)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        positions = jnp.arange(Sp)
+        bt_row = cache["block_tables"][slot]              # (max_pages,)
+        phys = bt_row[positions // page_size] * page_size \
+            + positions % page_size
+        # padding rows go to the scratch page unconditionally: when the
+        # padded bucket overruns max_pages * page_size the block-table
+        # gather above clamps to the LAST page — a real one — and would
+        # clobber cached prompt tokens
+        write_slots = jnp.where(positions < plen, phys,
+                                positions % page_size)
+        paged = {"page_size": page_size, "write_slots": write_slots}
+        x, new_layers, _ = self._run_layers(
+            params, x, positions, cache["layers"], None, causal=True,
+            window_override=window_override, paged=paged)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        last = jax.lax.dynamic_slice_in_dim(x, plen - 1, 1, axis=1)
+        return self._logits(params, last), new_cache
+
     def decode_step(self, params: Params, cache: Dict[str, Any],
                     tokens: jax.Array, pos: jax.Array, *,
                     window_override: Optional[int] = None,
+                    page_size: Optional[int] = None,
                     ) -> Tuple[jax.Array, Dict[str, Any]]:
-        """One decode step. tokens (B, 1); pos scalar absolute position."""
+        """One decode step.  tokens (B, 1).
+
+        Ring cache: ``pos`` is a *scalar* absolute position shared by
+        the whole (lockstep) batch.  Paged cache (``page_size`` given):
+        ``pos`` is a **vector** (B,) of per-request absolute positions —
+        requests in different decode phases share one step; ``pos[b] < 0``
+        marks an idle slot (its write goes to the scratch page and its
+        attention is fully masked).
+        """
+        if page_size is not None:
+            return self._decode_step_paged(
+                params, cache, tokens, pos, page_size=page_size,
+                window_override=window_override)
         x = jnp.take(params["embed"], tokens, axis=0)
         if self.cache_constraint is not None:
             cache = self.cache_constraint(cache)
@@ -822,6 +966,34 @@ class Model:
         new_cache["length"] = (pos + 1).astype(jnp.int32)
         if self.cache_constraint is not None:
             new_cache = self.cache_constraint(new_cache)
+        return self._logits(params, x), new_cache
+
+    def _decode_step_paged(self, params: Params, cache: Dict[str, Any],
+                           tokens: jax.Array, pos: jax.Array, *,
+                           page_size: int,
+                           window_override: Optional[int] = None,
+                           ) -> Tuple[jax.Array, Dict[str, Any]]:
+        pos = jnp.asarray(pos, jnp.int32)                 # (B,)
+        safe_pos = jnp.maximum(pos, 0)
+        x = jnp.take(params["embed"], tokens, axis=0)     # (B, 1, d)
+        bt = cache["block_tables"]
+        B = bt.shape[0]
+        phys = bt[jnp.arange(B), safe_pos // page_size] * page_size \
+            + safe_pos % page_size                        # (B,)
+        # idle lanes (pos < 0) MUST land on the scratch page even when
+        # their slot's block table is populated (a sequence that was
+        # prefilled this step but isn't decoding yet would otherwise get
+        # its first page clobbered by the lane's garbage write)
+        write_slots = jnp.where(pos >= 0, phys, safe_pos % page_size)
+        kv_len = jnp.maximum(pos + 1, 0)
+        paged = {"page_size": page_size, "write_slots": write_slots,
+                 "block_tables": bt, "kv_len": kv_len}
+        positions = safe_pos[:, None]                     # (B, 1) for RoPE
+        x, new_layers, _ = self._run_layers(
+            params, x, positions, cache["layers"], None, causal=True,
+            single_step=True, window_override=window_override, paged=paged)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
         return self._logits(params, x), new_cache
 
 

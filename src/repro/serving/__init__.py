@@ -1,1 +1,26 @@
-"""repro.serving substrate."""
+"""repro.serving substrate.
+
+Two engines over one model zoo:
+
+* :class:`~repro.serving.engine.ServingEngine` — length-bucket batching
+  (the paper's baseline discipline): simple, padding-free, but buckets
+  run sequentially and nobody joins mid-decode.
+* :class:`~repro.serving.continuous.ContinuousServingEngine` — paged
+  KV-cache pool (``kv_pool``) + continuous-batching scheduler
+  (``scheduler``): slot-indexed running batch, per-step join/evict,
+  preemption under memory pressure, NUMA-aware page placement.
+"""
+
+from .continuous import ContinuousServingEngine
+from .engine import (Completion, Request, ServingEngine,
+                     throughput_report)
+from .kv_pool import KVCachePool, KVPoolConfig
+from .sampler import SamplingParams, sample, sample_grouped
+from .scheduler import ContinuousScheduler, Schedule, Sequence
+
+__all__ = [
+    "Completion", "ContinuousScheduler", "ContinuousServingEngine",
+    "KVCachePool", "KVPoolConfig", "Request", "SamplingParams", "Schedule",
+    "Sequence", "ServingEngine", "sample", "sample_grouped",
+    "throughput_report",
+]

@@ -9,6 +9,11 @@ once and decoded in lockstep with per-request completion tracking.
 jit boundaries: one compiled ``prefill`` per (bucket_size, prompt_len)
 and one compiled ``decode_step`` per bucket_size; the static cache
 length keeps decode XLA-stable across steps.
+
+This engine is the *baseline*: buckets run strictly sequentially and no
+request can join mid-decode.  The production path is
+``repro.serving.continuous.ContinuousServingEngine`` (paged KV pool +
+continuous batching); both produce identical greedy tokens.
 """
 
 from __future__ import annotations
@@ -22,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.transformer import Model
-from .sampler import SamplingParams, sample
+from .sampler import SamplingParams, sample_grouped
 
 
 @dataclasses.dataclass
@@ -41,6 +46,12 @@ class Completion:
     tokens: List[int]
     latency_s: float
     prefill_s: float
+    #: absolute engine-clock stamps (``time.perf_counter``): work start /
+    #: finish — ``throughput_report`` derives true end-to-end wall time
+    #: from them instead of the old max(latency) (which under-reported
+    #: whenever buckets ran sequentially)
+    t0: float = 0.0
+    t1: float = 0.0
 
 
 class ServingEngine:
@@ -81,8 +92,17 @@ class ServingEngine:
     def generate(self, requests: Sequence[Request], *,
                  max_batch: int = 8) -> List[Completion]:
         out: List[Completion] = []
+        wall0 = time.perf_counter()
+        prefill_total = 0.0
         for bucket in self._buckets(requests, max_batch):
-            out.extend(self._run_bucket(bucket))
+            comps = self._run_bucket(bucket)
+            prefill_total += comps[0].prefill_s
+            out.extend(comps)
+        #: true phase times of the last generate() call, for
+        #: ``throughput_report(comps, **engine.last_phase_s)``
+        wall = time.perf_counter() - wall0
+        self.last_phase_s = {"wall_s": wall, "prefill_s": prefill_total,
+                             "decode_s": max(wall - prefill_total, 1e-9)}
         return sorted(out, key=lambda c: c.uid)
 
     def _run_bucket(self, bucket: List[Request]) -> List[Completion]:
@@ -98,22 +118,23 @@ class ServingEngine:
         cache = model.init_cache(B, self.max_len, cache_len=self.cache_len,
                                  memory_len=memory_len)
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = self._prefill(params, batch, cache)
         logits.block_until_ready()
-        t_prefill = time.time() - t0
+        t_prefill = time.perf_counter() - t0
 
         max_new = max(r.sampling.max_new_tokens for r in bucket)
-        sp = bucket[0].sampling
+        # each request keeps its OWN SamplingParams (temperature/top-k);
+        # lanes sharing params still sample in one device call
+        sps = [r.sampling for r in bucket]
         done = np.zeros(B, bool)
         generated: List[List[int]] = [[] for _ in range(B)]
-        cur = sample(logits, sp, self._next_key())
+        cur = sample_grouped(logits, sps, self._next_key())
         for step in range(max_new):
-            toks = np.asarray(cur[:, 0])
             for b, r in enumerate(bucket):
                 if done[b]:
                     continue
-                t = int(toks[b])
+                t = int(cur[b, 0])
                 generated[b].append(t)
                 if ((r.sampling.eos_id is not None
                      and t == r.sampling.eos_id)
@@ -121,26 +142,53 @@ class ServingEngine:
                     done[b] = True
             if done.all() or plen + step + 1 >= self.max_len:
                 break
-            logits, cache = self._decode(params, cache, cur,
+            logits, cache = self._decode(params, cache, jnp.asarray(cur),
                                          jnp.asarray(plen + step))
-            cur = sample(logits, sp, self._next_key())
-        dt = time.time() - t0
+            cur = sample_grouped(logits, sps, self._next_key())
+        t1 = time.perf_counter()
         return [Completion(uid=r.uid, prompt_len=plen,
-                           tokens=generated[b], latency_s=dt,
-                           prefill_s=t_prefill)
+                           tokens=generated[b], latency_s=t1 - t0,
+                           prefill_s=t_prefill, t0=t0, t1=t1)
                 for b, r in enumerate(bucket)]
 
 
-def throughput_report(completions: Sequence[Completion]) -> Dict[str, float]:
+def throughput_report(completions: Sequence[Completion], *,
+                      wall_s: Optional[float] = None,
+                      prefill_s: Optional[float] = None,
+                      decode_s: Optional[float] = None) -> Dict[str, float]:
+    """Phase-consistent throughput summary.
+
+    Engines measure their own phase times (``engine.last_phase_s``) —
+    pass them through for exact numbers.  Without them the report falls
+    back to the completions' ``t0``/``t1`` stamps: true end-to-end wall
+    is ``max(t1) - min(t0)`` (the old ``max(latency)`` under-reported
+    whenever buckets ran sequentially, since each bucket's latency
+    clock started at its own prefill).  Both phases use the same wall
+    so ``prefill_s + decode_s ~= wall_s`` for sequential engines.
+    """
     total_new = sum(len(c.tokens) for c in completions)
-    wall = max(c.latency_s for c in completions)
+    stamped = any(c.t1 > 0 for c in completions)
+    if wall_s is None:
+        if stamped:
+            wall_s = (max(c.t1 for c in completions)
+                      - min(c.t0 for c in completions))
+        else:   # no stamps (hand-built completions): best effort
+            wall_s = max(c.latency_s for c in completions)
+    if prefill_s is None:
+        if stamped:
+            # per-bucket prefills share one (t0, prefill_s) pair —
+            # dedupe so a bucket isn't counted once per member
+            prefill_s = sum(p for _, p in {(c.t0, c.prefill_s)
+                                           for c in completions})
+        else:   # stamp-less completions are per-request measurements
+            prefill_s = sum(c.prefill_s for c in completions)
+    if decode_s is None:
+        decode_s = max(wall_s - prefill_s, 1e-9)
     return {
         "requests": len(completions),
         "new_tokens": total_new,
-        "wall_s": wall,
-        "decode_tok_per_s": total_new / max(wall - completions[0].prefill_s,
-                                            1e-9),
+        "wall_s": wall_s,
+        "decode_tok_per_s": total_new / max(decode_s, 1e-9),
         "prefill_tok_per_s": (sum(c.prompt_len for c in completions)
-                              / max(sum(c.prefill_s for c in completions),
-                                    1e-9)),
+                              / max(prefill_s, 1e-9)),
     }

@@ -1,0 +1,155 @@
+"""NUMA-aware paged KV-cache pool (host-side allocator).
+
+ArcLight's §2.3 memory discipline — pre-allocate node-bound pools at
+startup, then *bind* rather than *allocate* at runtime — applied to the
+serving KV cache.  The physical cache is a fixed pool of fixed-size
+**pages** (``page_size`` token slots each, all layers of a page
+co-resident on one NUMA node).  At runtime a sequence owns an ordered
+list of pages (its *block table*); admission, growth, and eviction move
+page *ownership* around on the host without ever moving cache bytes on
+the device.
+
+Placement is planned through :class:`repro.core.memory.MemoryManager`
+(``plan_kv_pages``), so KV pages sit in the same per-node accounting as
+weights and activations: pages stripe round-robin across node pools and
+``MemoryManager.per_node_bytes`` reports the whole model's residency.
+On TPU the "node" is a mesh shard; on CPU it is a NUMA node the engine
+would ``mbind`` the page's carve-out to.
+
+Invariants (property-tested in ``tests/test_serving_paged.py``):
+
+* a physical page is owned by at most one live sequence (no aliasing);
+* page 0 is never handed out — it is the device-side scratch page that
+  idle batch slots and padded prefill positions write into;
+* freed pages return to their node free-list and are reused (LIFO, so
+  recently-touched — cache-warm — pages are preferred);
+* per-node live-byte accounting never exceeds the planned capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from ..core.memory import MemoryManager
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPoolConfig:
+    """Static shape of the physical page pool.
+
+    ``n_pages`` includes the reserved scratch page 0; the usable pool is
+    ``n_pages - 1`` pages.  ``page_bytes`` covers K and V for all layers
+    of one page.
+    """
+
+    n_pages: int
+    page_size: int
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    dtype_bytes: int = 4
+    n_nodes: int = 1
+    numa: bool = True
+
+    @property
+    def page_bytes(self) -> int:
+        return (2 * self.n_layers * self.page_size * self.n_kv_heads
+                * self.head_dim * self.dtype_bytes)
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return self.n_pages - 1
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+
+class KVCachePool:
+    """Free-list page allocator with per-sequence block tables."""
+
+    def __init__(self, cfg: KVPoolConfig,
+                 mm: Optional[MemoryManager] = None) -> None:
+        if cfg.n_pages < 2:
+            raise ValueError("need at least one usable page besides scratch")
+        self.cfg = cfg
+        self.mm = mm if mm is not None else MemoryManager(
+            cfg.n_nodes, numa=cfg.numa)
+        self.mm.plan_kv_pages(cfg.n_pages, cfg.page_bytes)
+        self._free: Dict[int, List[int]] = {}
+        for pid in range(cfg.n_pages - 1, 0, -1):   # page 0 stays reserved
+            self._free.setdefault(self.mm.kv_page_node(pid), []).append(pid)
+        self._pages: Dict[int, List[int]] = {}      # seq uid -> logical order
+        self._owner: Dict[int, int] = {}            # page id -> seq uid
+
+    # ------------------------------------------------------------------
+    def n_free(self) -> int:
+        return sum(len(v) for v in self._free.values())
+
+    def n_live(self) -> int:
+        return len(self._owner)
+
+    def can_grow(self, uid: int, n_tokens: int) -> bool:
+        need = self.cfg.pages_for(n_tokens) - len(self._pages.get(uid, []))
+        return need <= self.n_free()
+
+    def _take_page(self, node_hint: int) -> int:
+        """Pop a free page, preferring the hinted node's pool."""
+        order = sorted(self._free, key=lambda n: (n != node_hint,
+                                                  -len(self._free[n]), n))
+        for node in order:
+            if self._free[node]:
+                return self._free[node].pop()
+        raise RuntimeError("KV pool exhausted")
+
+    # ------------------------------------------------------------------
+    def grow(self, uid: int, n_tokens: int, *, node_hint: int = 0) -> bool:
+        """Ensure ``uid`` owns pages covering ``n_tokens`` token slots.
+
+        Returns False (allocating nothing) when the free pool cannot
+        cover the growth — the scheduler then preempts somebody.
+        """
+        pages = self._pages.setdefault(uid, [])
+        need = self.cfg.pages_for(n_tokens) - len(pages)
+        if need <= 0:
+            return True
+        if self.cfg.pages_for(n_tokens) > self.cfg.max_pages_per_seq:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens needs "
+                f"{self.cfg.pages_for(n_tokens)} pages; pool only has "
+                f"{self.cfg.max_pages_per_seq}")
+        if need > self.n_free():
+            return False
+        for _ in range(need):
+            pid = self._take_page(node_hint)
+            self._owner[pid] = uid
+            pages.append(pid)
+        return True
+
+    def free(self, uid: int) -> int:
+        """Release all of a sequence's pages; returns how many."""
+        pages = self._pages.pop(uid, [])
+        for pid in pages:       # stack top = last-written (warmest) page
+            del self._owner[pid]
+            self._free[self.mm.kv_page_node(pid)].append(pid)
+        return len(pages)
+
+    def block_table(self, uid: int) -> List[int]:
+        return list(self._pages.get(uid, []))
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+    def live_bytes_per_node(self) -> Dict[int, int]:
+        out = {n: 0 for n in self._free}
+        for pid in self._owner:
+            out[self.mm.kv_page_node(pid)] += self.cfg.page_bytes
+        return out
+
+    def capacity_bytes_per_node(self) -> Dict[int, int]:
+        """Planned (pre-allocated) KV bytes per node, from the planner's
+        pool peaks — what the node's carve-out actually reserves."""
+        out: Dict[int, int] = {}
+        for p in self.mm.kv_pools:
+            out[p.node_id or 0] = out.get(p.node_id or 0, 0) + p.peak
+        return out

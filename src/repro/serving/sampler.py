@@ -1,12 +1,20 @@
-"""Token samplers: greedy / temperature / top-k."""
+"""Token samplers: greedy / temperature / top-k.
+
+``sample`` applies one :class:`SamplingParams` to a whole batch;
+``sample_grouped`` honours a *per-request* params list by grouping the
+batch lanes that share (temperature, top_k) and sampling each group
+with its own sub-key — the serving engines use it so mixed-policy
+batches stay a handful of device calls instead of one per request.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,3 +38,23 @@ def sample(logits: jax.Array, params: SamplingParams,
         lf = jnp.where(lf < kth, -jnp.inf, lf)
     tok = jax.random.categorical(key, lf, axis=-1)
     return tok[:, None].astype(jnp.int32)
+
+
+def sample_grouped(logits: jax.Array, params: Sequence[SamplingParams],
+                   key: jax.Array) -> np.ndarray:
+    """logits (B, 1, V), one SamplingParams per lane -> tokens (B, 1).
+
+    Lanes with identical (temperature, top_k) sample together; greedy
+    lanes ignore the key, so a fully-greedy batch is one argmax."""
+    B = logits.shape[0]
+    if len(params) != B:
+        raise ValueError(f"{len(params)} params for batch {B}")
+    groups = {}
+    for b, sp in enumerate(params):
+        groups.setdefault((sp.temperature, sp.top_k), []).append(b)
+    out = np.zeros((B, 1), np.int32)
+    keys = jax.random.split(key, len(groups))
+    for sub, (_, lanes) in zip(keys, sorted(groups.items())):
+        idx = jnp.asarray(lanes)
+        out[lanes] = np.asarray(sample(logits[idx], params[lanes[0]], sub))
+    return out

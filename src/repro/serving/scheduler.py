@@ -1,0 +1,195 @@
+"""Continuous-batching scheduler (the serving-side ArcLight claim).
+
+The bucket engine (``serving.engine``) runs length-equal batches
+strictly sequentially: no request can join mid-decode, and the batch
+runs until its *slowest* member finishes.  On CPU servers continuous
+batching is the dominant throughput lever (arXiv:2407.00029 §4): keep a
+fixed-capacity **running batch** of ``max_running`` slot-indexed
+sequences, and at every decode step
+
+* **evict** finished sequences (their slot and KV pages free instantly),
+* **admit** waiting requests into free slots when the KV pool can cover
+  their prompt (FCFS; prefill interleaves with ongoing decode),
+* **grow** each running sequence by one token slot, **preempting** the
+  youngest-arrival sequence (recompute-style: its pages are freed and
+  the whole prefix re-queues) when the pool is exhausted.
+
+Slots are *positions in the device batch*, so membership changes are
+pure data (block tables, position vectors) — the compiled decode step
+never re-specialises.  The scheduler is deliberately jax-free: it
+manipulates the :class:`~repro.serving.kv_pool.KVCachePool` and emits
+:class:`Schedule` decisions; the engine turns decisions into device
+calls.  Policies beyond FCFS (priority, SLA-aware, prefix-sharing
+admission) slot in behind ``policy=`` — see ROADMAP "Open items".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Deque, Dict, List, Optional
+from collections import deque
+
+from .engine import Request
+from .kv_pool import KVCachePool
+
+
+@dataclasses.dataclass(eq=False)    # identity semantics: a Sequence is
+class Sequence:                     # one admission ticket, never a value
+    """A request's life inside the scheduler."""
+
+    request: Request
+    arrival: float = 0.0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1                  # -1 = not running
+    n_prefilled: int = 0            # tokens whose KV is resident
+    n_preempts: int = 0
+    t_first_sched: float = -1.0     # first time it got a slot
+
+    @property
+    def uid(self) -> int:
+        return self.request.uid
+
+    @property
+    def full_prompt(self) -> List[int]:
+        """Prompt for (re-)prefill: original prompt + tokens generated
+        before a preemption (recompute-style restart)."""
+        return list(self.request.prompt) + self.generated
+
+    @property
+    def next_pos(self) -> int:
+        """Absolute position of the next token to be fed/decoded."""
+        return len(self.request.prompt) + len(self.generated)
+
+    def is_done(self, max_len: int) -> bool:
+        sp = self.request.sampling
+        if len(self.generated) >= sp.max_new_tokens:
+            return True
+        if (sp.eos_id is not None and self.generated
+                and self.generated[-1] == sp.eos_id):
+            return True
+        return self.next_pos >= max_len
+
+
+@dataclasses.dataclass
+class Schedule:
+    """One step's decisions, in execution order."""
+
+    finished: List[Sequence] = dataclasses.field(default_factory=list)
+    preempted: List[Sequence] = dataclasses.field(default_factory=list)
+    prefills: List[Sequence] = dataclasses.field(default_factory=list)
+    decodes: List[Sequence] = dataclasses.field(default_factory=list)
+
+
+class ContinuousScheduler:
+    def __init__(self, pool: KVCachePool, *, max_running: int,
+                 max_len: int, policy: str = "fcfs") -> None:
+        if policy != "fcfs":
+            raise ValueError(f"unknown policy {policy!r}")
+        self.pool = pool
+        self.max_running = max_running
+        self.max_len = max_len
+        self.policy = policy
+        self.waiting: Deque[Sequence] = deque()
+        self.running: Dict[int, Sequence] = {}      # slot -> Sequence
+        self._free_slots = list(range(max_running - 1, -1, -1))
+        self.n_preemptions = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request, arrival: float = 0.0) -> Sequence:
+        seq = Sequence(request=request, arrival=arrival)
+        self.waiting.append(seq)
+        return seq
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def _slot_node(self, slot: int) -> int:
+        """Home-node hint: stripe slots across the pool's nodes so each
+        node's threads mostly touch locally-resident KV pages."""
+        n = max(len(self.pool.mm.kv_pools), 1)
+        return slot % n
+
+    def _requeue(self, seq: Sequence) -> None:
+        """FCFS re-insertion by arrival time (stable)."""
+        i = 0
+        for i, w in enumerate(self.waiting):
+            if w.arrival > seq.arrival:
+                self.waiting.insert(i, seq)
+                return
+        self.waiting.append(seq)
+
+    # ------------------------------------------------------------------
+    def step(self, now: float = 0.0) -> Schedule:
+        """Plan one engine step.  Order matters: evict, admit, grow."""
+        sched = Schedule()
+
+        # 1. evict finished sequences — slot and pages free immediately
+        for slot in sorted(self.running):
+            seq = self.running[slot]
+            if seq.is_done(self.max_len):
+                del self.running[slot]
+                self._free_slots.append(slot)
+                self.pool.free(seq.uid)
+                seq.slot = -1
+                sched.finished.append(seq)
+
+        # 2. admit waiting arrivals while a slot + prompt pages exist
+        while (self.waiting and self._free_slots
+               and self.waiting[0].arrival <= now):
+            seq = self.waiting[0]
+            # reserve the prompt plus one decode token so admission can
+            # never instantly re-preempt itself
+            slot = self._free_slots[-1]
+            if not self.pool.grow(seq.uid, len(seq.full_prompt) + 1,
+                                  node_hint=self._slot_node(slot)):
+                break
+            self.waiting.popleft()
+            self._free_slots.pop()
+            seq.slot = slot
+            seq.n_prefilled = len(seq.full_prompt)
+            if seq.t_first_sched < 0:
+                seq.t_first_sched = now
+            self.running[slot] = seq
+            sched.prefills.append(seq)
+
+        # 3. grow every running sequence for this step's token write;
+        #    preempt youngest arrivals when the pool runs dry
+        for slot in sorted(list(self.running)):
+            seq = self.running.get(slot)
+            if seq is None:                 # preempted earlier in this loop
+                continue
+            if seq in sched.prefills:       # already covered by admission
+                continue
+            while not self.pool.grow(seq.uid, seq.next_pos + 1,
+                                     node_hint=self._slot_node(slot)):
+                victim = self._pick_victim(exclude=seq)
+                if victim is None:
+                    raise RuntimeError(
+                        "KV pool cannot hold a single sequence — "
+                        "raise n_pages or lower max_len")
+                self._preempt(victim)
+                sched.preempted.append(victim)
+                if victim.slot == -1 and victim in sched.prefills:
+                    sched.prefills.remove(victim)
+
+        sched.decodes = [self.running[s] for s in sorted(self.running)
+                         if self.running[s] not in sched.prefills]
+        return sched
+
+    # ------------------------------------------------------------------
+    def _pick_victim(self, exclude: Sequence) -> Optional[Sequence]:
+        """Youngest arrival loses (FCFS fairness for the oldest)."""
+        candidates = [s for s in self.running.values() if s is not exclude]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda s: (s.arrival, s.uid))
+
+    def _preempt(self, seq: Sequence) -> None:
+        self.n_preemptions += 1
+        seq.n_preempts += 1
+        del self.running[seq.slot]
+        self._free_slots.append(seq.slot)
+        self.pool.free(seq.uid)
+        seq.slot = -1
+        seq.n_prefilled = 0
+        self._requeue(seq)

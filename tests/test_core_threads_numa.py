@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.numa import (KUNPENG_920_4NODE, QWEN3_4B,
                              async_gain_tokens_per_s, decode_throughput,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.moe import init_moe, moe, moe_dense, moe_scatter
 from repro.models.recurrent import (RGLRUState, init_rglru_block,

@@ -32,8 +32,8 @@ def test_tp_blocks_match_reference_on_8_devices():
         import jax, numpy as np
         from repro.core import tp
         assert len(jax.devices()) == 8
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("model",))
         rng = np.random.default_rng(0)
         d, f, t = 32, 64, 8
         params = {k: (rng.normal(size=s)*0.1).astype(np.float32)
@@ -61,8 +61,8 @@ def test_sharded_params_placement():
     print(_run("""
         import jax, numpy as np
         from repro.core import tp
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("model",))
         params = {"w_up": np.zeros((16, 64), np.float32),
                   "w_down": np.zeros((64, 16), np.float32),
                   "norm": np.zeros((16,), np.float32)}
@@ -87,8 +87,8 @@ def test_seq_sharded_flash_decode_combine():
         from jax.experimental.shard_map import shard_map
         from repro.models.attention import (flash_attention,
                                             combine_partials)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         B,S,H,D = 1, 64, 2, 16
         rng = np.random.default_rng(0)
         q = rng.normal(size=(B,1,H,D)).astype(np.float32)
@@ -138,8 +138,8 @@ def test_moe_hook_tp_and_ep_match_dense_oracle():
         from repro.launch.shardings import Policy, make_moe_hook
         from repro.models.moe import init_moe, moe
         from repro.models.config import ModelConfig
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         d, f, E, k = 16, 32, 8, 2
         cfg = ModelConfig(name="m", arch_type="moe", n_layers=2,
                           d_model=d, n_heads=2, n_kv_heads=1, d_ff=f,

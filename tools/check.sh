@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# PR gate: tier-1 tests + a short continuous-serving smoke so the
+# paged-KV scheduler path is exercised on every change.
+#
+#   tools/check.sh            # full tier-1 + serving smoke
+#   tools/check.sh --smoke    # serving smoke only (~30 s)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--smoke" ]]; then
+    echo "== tier-1: pytest =="
+    python -m pytest -x -q
+fi
+
+echo "== serving smoke: continuous engine, tiny arch =="
+python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \
+    --max-new 8 --max-running 4 --page-size 8 --warmup-steps 0
+echo "== serving smoke: bucket baseline parity path =="
+python -m repro.launch.serve --arch qwen3-1.7b --engine bucket \
+    --max-new 8 --warmup-steps 0
+echo "check.sh: OK"
