@@ -12,6 +12,18 @@ request on arrival into the slot-indexed running batch.  Reported rows:
 
 Wall times include the arrival span — that is the point: decode tok/s
 here is throughput *as the client sees it*, not device-only.
+
+Two further sections exercise the prefix-caching / chunked-prefill
+follow-ons (see ``docs/serving.md``):
+
+  serving_prefix.*   shared-system-prompt Poisson workload, prefix
+                     cache off vs on: prefill pages allocated, pages
+                     shared, prompt tokens served from cache, and a
+                     greedy-token parity check (caching must be
+                     invisible in the output)
+  serving_chunk.*    long-prompt admission into a busy decode batch,
+                     one-shot vs chunked prefill: max wall gap between
+                     consecutive decode steps (chunking bounds it)
 """
 
 from __future__ import annotations
@@ -90,8 +102,111 @@ def serving_cb_rows(mean_gap_scale: float = 1.0) -> List[Row]:
     ]
 
 
+def serving_prefix_rows() -> List[Row]:
+    """Shared-system-prompt workload: N requests = one long system
+    prompt + a short unique suffix, Poisson arrivals.  Prefix caching
+    should cut the pages *allocated* for prefill (matched pages are
+    shared, not allocated) without changing a single greedy token."""
+    from repro.models import ModelConfig, build_model
+    from repro.serving import (ContinuousServingEngine, Request,
+                               SamplingParams)
+
+    cfg = ModelConfig(name="bench-tiny", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    system = list(rng.integers(1, 258, 64))      # 8 full pages @ ps=8
+    reqs = [Request(uid=i, prompt=system + list(rng.integers(1, 258, 8)),
+                    sampling=SamplingParams(max_new_tokens=24))
+            for i in range(8)]
+    arrivals = np.cumsum(rng.exponential(0.08, size=len(reqs))).tolist()
+    max_len = len(reqs[0].prompt) + 24 + 8
+
+    results = {}
+    for cached in (False, True):
+        eng = ContinuousServingEngine(model, params, max_len=max_len,
+                                      max_running=8, page_size=8,
+                                      prefix_cache=cached)
+        eng.generate(reqs[:1])                  # warm compile caches
+        for k in eng.pool.stats:
+            eng.pool.stats[k] = 0
+        comps = eng.generate(reqs, arrivals=arrivals)
+        results[cached] = (eng.pool.stats.copy(),
+                           [c.tokens for c in comps])
+    st_off, toks_off = results[False]
+    st_on, toks_on = results[True]
+    parity = "OK" if toks_on == toks_off else "MISMATCH"
+    saved = st_off["fresh_pages"] - st_on["fresh_pages"]
+    return [
+        ("serving_prefix.pages_allocated.nocache", 0.0,
+         f"{st_off['fresh_pages']}"),
+        ("serving_prefix.pages_allocated.cached", 0.0,
+         f"{st_on['fresh_pages']}"),
+        ("serving_prefix.pages_shared", 0.0, f"{st_on['shared_pages']}"),
+        ("serving_prefix.cow_copies", 0.0, f"{st_on['cow_copies']}"),
+        ("serving_prefix.prompt_tokens_from_cache", 0.0,
+         f"{st_on['cached_tokens']}"),
+        ("serving_prefix.pages_saved", 0.0, f"{saved}"),
+        ("serving_prefix.greedy_parity", 0.0, parity),
+    ]
+
+
+def serving_chunk_rows() -> List[Row]:
+    """Long-prompt admission stall: a 768-token prompt arrives while 4
+    requests are mid-decode.  One-shot prefill stalls every decode for
+    the whole prompt; chunked prefill (32 tokens/step) interleaves, so
+    the max gap between consecutive decode steps stays near one chunk's
+    cost.  A wider model than the other sections so prefill *compute*
+    (not dispatch overhead) is what stalls the batch."""
+    from repro.models import ModelConfig, build_model
+    from repro.serving import (ContinuousServingEngine, Request,
+                               SamplingParams)
+
+    cfg = ModelConfig(name="bench-wide", arch_type="dense", n_layers=8,
+                      d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(29)
+    short = [Request(uid=i, prompt=list(rng.integers(1, 258, 8)),
+                     sampling=SamplingParams(max_new_tokens=200))
+             for i in range(4)]
+    long_r = Request(uid=4, prompt=list(rng.integers(1, 258, 768)),
+                     sampling=SamplingParams(max_new_tokens=8))
+    arrivals = [0.0] * 4 + [0.15]               # long prompt mid-decode
+    max_len = 1024
+    # size the pool to the workload's true peak (4 shorts + the long
+    # prompt), not to max_running * max_len: every engine call pays an
+    # O(pool bytes) cache materialisation (ROADMAP: paged pool in the
+    # layer scan), so an oversized pool drowns the signal in memcpy
+    n_pages = 208
+
+    gaps = {}
+    for chunk in (None, 32):
+        eng = ContinuousServingEngine(model, params, max_len=max_len,
+                                      max_running=5, page_size=8,
+                                      n_pages=n_pages,
+                                      prefill_chunk=chunk,
+                                      prefix_cache=False)
+        eng.generate([long_r], arrivals=[0.0])  # warm prefill compiles
+        eng.generate(short[:1])
+        eng.generate(short + [long_r], arrivals=arrivals)   # full warm
+        eng.generate(short + [long_r], arrivals=arrivals)
+        gaps[chunk] = max(eng.decode_gaps_s) if eng.decode_gaps_s else 0.0
+    ratio = gaps[None] / max(gaps[32], 1e-9)
+    return [
+        ("serving_chunk.max_decode_gap_ms.oneshot", gaps[None] * 1e6,
+         f"{gaps[None] * 1e3:.1f}"),
+        ("serving_chunk.max_decode_gap_ms.chunked32", gaps[32] * 1e6,
+         f"{gaps[32] * 1e3:.1f}"),
+        ("serving_chunk.stall_reduction", 0.0, f"{ratio:.2f}x"),
+    ]
+
+
 def all_rows() -> List[Row]:
-    return serving_cb_rows()
+    return serving_cb_rows() + serving_prefix_rows() + serving_chunk_rows()
 
 
 if __name__ == "__main__":

@@ -42,6 +42,12 @@ def main() -> int:
     ap.add_argument("--n-pages", type=int, default=None,
                     help="continuous engine: KV pool pages "
                          "(default: no-preemption sizing)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous engine: prefill at most this many "
+                         "prompt tokens per step (default: one-shot)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="continuous engine: disable prompt-prefix "
+                         "page sharing")
     ap.add_argument("--warmup-steps", type=int, default=40,
                     help="brief LM warm-up so outputs aren't noise "
                          "(0 = random weights)")
@@ -111,8 +117,14 @@ def main() -> int:
     if args.engine == "continuous":
         eng = ContinuousServingEngine(
             model, params, max_len=max_len, max_running=args.max_running,
-            page_size=args.page_size, n_pages=args.n_pages)
+            page_size=args.page_size, n_pages=args.n_pages,
+            prefill_chunk=args.prefill_chunk,
+            prefix_cache=not args.no_prefix_cache)
         comps = eng.generate(reqs)
+        st = eng.pool.stats
+        print(f"kv pool: {st['fresh_pages']} pages allocated, "
+              f"{st['shared_pages']} shared, {st['cow_copies']} CoW, "
+              f"{st['cached_tokens']} prompt tokens served from cache")
     else:
         eng = ServingEngine(model, params, max_len=max_len)
         comps = eng.generate(reqs, max_batch=args.max_batch)

@@ -212,10 +212,14 @@ def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
     ``cache['k']/['v']`` are flat views of the shared physical page pool
     ((n_pages * page_size, Hkv, D)); ``paged`` carries the per-call slot
     mapping (see ``Model.init_cache`` docstring).  Prefill (S > 1)
-    scatters the fresh K/V rows to their physical slots and attends over
-    the fresh K/V directly (the cache was empty, identical maths);
-    decode (S == 1) scatters one row per sequence and attends through
-    the block table with the gather-based paged kernel.
+    scatters the fresh K/V rows to their physical slots; a one-shot
+    prefill of a fresh sequence attends over the fresh K/V directly
+    (the cache was empty, identical maths), while a *resumed* prefill
+    chunk (``paged['prefill_ctx']`` present — chunked prefill or a
+    prefix-cached prompt) gathers the full context through the block
+    table and attends with absolute-position causal masking.  Decode
+    (S == 1) scatters one row per sequence and attends through the
+    block table with the gather-based paged kernel.
     """
     from ..kernels.ops import paged_gqa_decode_attention
     B, S = q.shape[:2]
@@ -224,9 +228,22 @@ def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
     if S > 1:                                 # prefill: one sequence
         ck = cache["k"].at[write_slots].set(k[0])
         cv = cache["v"].at[write_slots].set(v[0])
-        out = flash_attention(q, k, v, causal=True, window=window,
-                              chunk=ATTN_CHUNK,
-                              softcap=cfg.attn_logit_softcap)
+        ctx = paged.get("prefill_ctx")
+        if ctx is not None:
+            # resumed chunk: earlier tokens' K/V are already resident in
+            # the pool (written by prior chunks, shared prefix pages, or
+            # a copy-on-write clone) — gather them *after* this chunk's
+            # write so q sees [0, kv_len) at absolute positions
+            kctx = ck[ctx["phys"]][None]
+            vctx = cv[ctx["phys"]][None]
+            out = flash_attention(q, kctx, vctx, causal=True,
+                                  window=window, q_offset=ctx["q_offset"],
+                                  kv_len=ctx["kv_len"], chunk=ATTN_CHUNK,
+                                  softcap=cfg.attn_logit_softcap)
+        else:
+            out = flash_attention(q, k, v, causal=True, window=window,
+                                  chunk=ATTN_CHUNK,
+                                  softcap=cfg.attn_logit_softcap)
     else:                                     # decode: one token per slot
         ck = cache["k"].at[write_slots].set(k[:, 0])
         cv = cache["v"].at[write_slots].set(v[:, 0])
@@ -900,33 +917,63 @@ class Model:
     def prefill_paged(self, params: Params, batch: Dict[str, Any],
                       cache: Dict[str, Any], slot: jax.Array,
                       plen: jax.Array, *, page_size: int,
+                      start: Optional[jax.Array] = None,
+                      ctx_pages: Optional[int] = None,
                       window_override: Optional[int] = None,
                       ) -> Tuple[jax.Array, Dict[str, Any]]:
-        """Prefill ONE sequence into batch slot ``slot`` of a paged cache.
+        """Prefill ONE sequence chunk into batch slot ``slot`` of a
+        paged cache.
 
         ``batch['tokens']`` is (1, Sp) right-padded to any convenient
-        bucket length; ``plen`` (traced scalar) is the real prompt
-        length, so one compilation per Sp serves every shorter prompt.
+        bucket length; ``plen`` (traced scalar) is the real chunk
+        length, so one compilation per Sp serves every shorter chunk.
         K/V rows land in the physical pages ``cache['block_tables'][slot]``
         maps (padded positions fall through unmapped entries to the
         scratch page).  Returns logits of the *last real* token.
+
+        ``start`` (traced scalar) resumes prefill at an arbitrary
+        absolute position offset: the chunk's tokens sit at positions
+        ``[start, start + plen)`` and attention runs over the whole
+        resident context ``[0, start + plen)``, gathered through the
+        block table from ``ctx_pages`` leading pages (static — the
+        caller buckets it; pages past the table or past ``kv_len`` are
+        masked out).  This is the entry point for **chunked prefill**
+        and for resuming after a **prefix-cache** hit, where positions
+        ``[0, start)`` were filled by earlier chunks, shared pages, or
+        a copy-on-write clone.  ``start=None`` is the one-shot fresh
+        path (attends over its own K/V only — identical maths, cheaper).
         """
         tokens = batch["tokens"]
         Sp = tokens.shape[1]
         slot = jnp.asarray(slot, jnp.int32)
         plen = jnp.asarray(plen, jnp.int32)
         x = jnp.take(params["embed"], tokens, axis=0)
-        positions = jnp.arange(Sp)
+        offsets = jnp.arange(Sp)
         bt_row = cache["block_tables"][slot]              # (max_pages,)
+        if start is None:
+            positions = offsets
+        else:
+            positions = jnp.asarray(start, jnp.int32) + offsets
         phys = bt_row[positions // page_size] * page_size \
             + positions % page_size
         # padding rows go to the scratch page unconditionally: when the
         # padded bucket overruns max_pages * page_size the block-table
         # gather above clamps to the LAST page — a real one — and would
         # clobber cached prompt tokens
-        write_slots = jnp.where(positions < plen, phys,
-                                positions % page_size)
-        paged = {"page_size": page_size, "write_slots": write_slots}
+        write_slots = jnp.where(offsets < plen, phys,
+                                offsets % page_size)
+        paged: Dict[str, Any] = {"page_size": page_size,
+                                 "write_slots": write_slots}
+        if start is not None:
+            if ctx_pages is None:
+                raise ValueError("resumed prefill needs static ctx_pages")
+            ctx_pos = jnp.arange(ctx_pages * page_size)
+            paged["prefill_ctx"] = {
+                "phys": bt_row[ctx_pos // page_size] * page_size
+                        + ctx_pos % page_size,
+                "kv_len": jnp.asarray(start, jnp.int32) + plen,
+                "q_offset": jnp.asarray(start, jnp.int32),
+            }
         x, new_layers, _ = self._run_layers(
             params, x, positions, cache["layers"], None, causal=True,
             window_override=window_override, paged=paged)

@@ -8,19 +8,21 @@ Two engines over one model zoo:
 * :class:`~repro.serving.continuous.ContinuousServingEngine` — paged
   KV-cache pool (``kv_pool``) + continuous-batching scheduler
   (``scheduler``): slot-indexed running batch, per-step join/evict,
-  preemption under memory pressure, NUMA-aware page placement.
+  preemption under memory pressure, NUMA-aware page placement,
+  refcounted prefix caching (shared prompt pages, copy-on-write) and
+  chunked prefill (long prompts interleave with decode).
 """
 
 from .continuous import ContinuousServingEngine
 from .engine import (Completion, Request, ServingEngine,
                      throughput_report)
-from .kv_pool import KVCachePool, KVPoolConfig
+from .kv_pool import KVCachePool, KVPoolConfig, PrefixCache, PrefixMatch
 from .sampler import SamplingParams, sample, sample_grouped
 from .scheduler import ContinuousScheduler, Schedule, Sequence
 
 __all__ = [
     "Completion", "ContinuousScheduler", "ContinuousServingEngine",
-    "KVCachePool", "KVPoolConfig", "Request", "SamplingParams", "Schedule",
-    "Sequence", "ServingEngine", "sample", "sample_grouped",
-    "throughput_report",
+    "KVCachePool", "KVPoolConfig", "PrefixCache", "PrefixMatch", "Request",
+    "SamplingParams", "Schedule", "Sequence", "ServingEngine", "sample",
+    "sample_grouped", "throughput_report",
 ]

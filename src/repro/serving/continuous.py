@@ -7,26 +7,46 @@ running batch through one compiled decode step —
 * ``decode``  compiles **once** per engine: (B, 1) tokens + (B,)
   positions + (B, max_pages) block tables are all data, so requests
   join, leave, and get preempted without re-specialising XLA;
-* ``prefill`` compiles once per padded prompt-bucket length (next
-  power of two), with the real length a traced scalar — any prompt
-  length reuses a handful of compilations;
+* ``prefill`` compiles once per (padded chunk-bucket, context-page
+  bucket) pair — chunk buckets are next-power-of-two lengths with the
+  real length a traced scalar, so any prompt length reuses a handful
+  of compilations;
 * idle slots run with position −1: their K/V write lands on the
   reserved scratch page and their attention is fully masked, so a
   partially-empty batch is correct, just not free.
 
-Interleaving policy: admissions (prefill) happen at the step boundary
-before the decode is launched — the FCFS prefill/decode interleave of
+Prefill is **chunked** (``prefill_chunk=``): a long prompt runs
+``prefill_chunk`` tokens per engine step, interleaved with everybody
+else's decode, so admission can never stall the decode batch for more
+than one chunk's worth of work (the admission-stall problem
+arXiv:2407.00029 §3 attacks with prefill/decode overlap).  Each chunk
+resumes at ``Sequence.n_prefilled`` via ``Model.prefill_paged(start=,
+ctx_pages=)``; only the final chunk's logits sample a token.
+
+Prefix caching (``prefix_cache=``): admission shares every resident
+page whose token-block prefix matches the new prompt (see
+``kv_pool.PrefixCache``), and the engine's duties are (a) applying the
+pool's queued copy-on-write page copies to the device cache *before*
+the step's forward passes, and (b) registering a prompt's pages in the
+prefix map once its prefill completes — i.e. once the KV bytes are
+actually resident, never earlier.
+
+Interleaving policy: prefill chunks happen at the step boundary before
+the decode is launched — the FCFS prefill/decode interleave of
 arXiv:2407.00029 §3.  Requests can carry real arrival times
 (``generate(..., arrivals=...)``): the engine sleeps only when nothing
 is runnable, which is exactly the regime where continuous batching
 beats the sequential length-bucket engine (it decodes early arrivals
-while late ones are still in flight).
+while late ones are still in flight).  ``decode_gaps_s`` records the
+wall gap between consecutive decode steps of a ``generate`` call — the
+bench uses ``max()`` of it to show chunking bounds the decode stall a
+long-prompt admission can cause.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +71,8 @@ class ContinuousServingEngine:
                  max_running: int = 8, page_size: int = 16,
                  n_pages: Optional[int] = None, n_nodes: int = 1,
                  numa: bool = True,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = True,
                  window_override: Optional[int] = None,
                  seed: int = 0) -> None:
         cfg = model.cfg
@@ -72,30 +94,59 @@ class ContinuousServingEngine:
             n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
             dtype_bytes=jnp.dtype(cfg.dtype).itemsize, n_nodes=n_nodes,
-            numa=numa))
+            numa=numa), prefix_cache=prefix_cache)
         self.scheduler = ContinuousScheduler(
-            self.pool, max_running=max_running, max_len=max_len)
+            self.pool, max_running=max_running, max_len=max_len,
+            prefill_chunk=prefill_chunk)
         self.cache = model.init_cache(max_running, max_len,
                                       page_size=page_size, n_pages=n_pages)
 
+        # the cache argument is donated: the page pool is tens of MB and
+        # every step rebinds ``self.cache`` to the returned tree, so XLA
+        # may scatter K/V rows in place instead of copying the whole
+        # pool per call (measured: the copy dominated chunked prefill)
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(
                 p, c, t, pos, page_size=page_size,
-                window_override=window_override))
-        self._prefill_jits: Dict[int, Any] = {}
+                window_override=window_override),
+            donate_argnums=1)
+        #: (padded chunk len, ctx page bucket) -> compiled prefill;
+        #: ctx bucket 0 is the one-shot fresh-sequence path
+        self._prefill_jits: Dict[Tuple[int, int], Any] = {}
+        # batched CoW page copier: one donated gather+scatter moves every
+        # queued page in-place (un-jitted .at[].set would copy the whole
+        # pool once per page); row counts bucket so compiles stay few
+        self._copy_rows = jax.jit(
+            lambda k, v, src, dst: (k.at[:, dst].set(k[:, src]),
+                                    v.at[:, dst].set(v[:, src])),
+            donate_argnums=(0, 1))
+        #: wall-clock gaps between consecutive decode steps of the last
+        #: generate() call (bench: max gap == worst admission stall)
+        self.decode_gaps_s: List[float] = []
 
     # ------------------------------------------------------------------
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _prefill_fn(self, padded_len: int):
-        if padded_len not in self._prefill_jits:
-            self._prefill_jits[padded_len] = jax.jit(
-                lambda p, b, c, slot, plen: self.model.prefill_paged(
-                    p, b, c, slot, plen, page_size=self.page_size,
-                    window_override=self.window_override))
-        return self._prefill_jits[padded_len]
+    def _prefill_fn(self, padded_len: int, ctx_pages: int):
+        key = (padded_len, ctx_pages)
+        if key not in self._prefill_jits:
+            if ctx_pages:
+                self._prefill_jits[key] = jax.jit(
+                    lambda p, b, c, slot, plen, start:
+                    self.model.prefill_paged(
+                        p, b, c, slot, plen, start=start,
+                        ctx_pages=ctx_pages, page_size=self.page_size,
+                        window_override=self.window_override),
+                    donate_argnums=2)
+            else:
+                self._prefill_jits[key] = jax.jit(
+                    lambda p, b, c, slot, plen: self.model.prefill_paged(
+                        p, b, c, slot, plen, page_size=self.page_size,
+                        window_override=self.window_override),
+                    donate_argnums=2)
+        return self._prefill_jits[key]
 
     def _sync_tables(self) -> None:
         """Host block tables / positions -> device cache arrays."""
@@ -104,6 +155,57 @@ class ContinuousServingEngine:
             pages = self.pool.block_table(seq.uid)
             bt[slot, :len(pages)] = pages
         self.cache["block_tables"] = jnp.asarray(bt)
+
+    def _apply_copies(self) -> None:
+        """Apply the pool's queued copy-on-write page copies to the
+        device cache (whole-page K/V row copies, all layers at once).
+        Must run after scheduling and before this step's forwards, so a
+        resumed prefill or decode reads the cloned rows, not scratch."""
+        copies = self.pool.drain_copies()
+        if not copies:
+            return
+        ps = self.page_size
+        bucket = _pad_bucket(len(copies), lo=1)
+        # pad with scratch-page self-copies (row 0 -> row 0 is a no-op
+        # write into the scratch page) so compile keys stay bucketed
+        src = np.zeros((bucket * ps,), np.int32)
+        dst = np.zeros((bucket * ps,), np.int32)
+        for i, (s, d) in enumerate(copies):
+            src[i * ps:(i + 1) * ps] = np.arange(s * ps, (s + 1) * ps)
+            dst[i * ps:(i + 1) * ps] = np.arange(d * ps, (d + 1) * ps)
+        kv = self.cache["layers"]["self"]
+        k, v = self._copy_rows(kv["k"], kv["v"], jnp.asarray(src),
+                               jnp.asarray(dst))
+        self.cache = dict(self.cache)
+        self.cache["layers"] = {"self": {"k": k, "v": v}}
+
+    def _run_prefill_chunk(self, seq) -> jax.Array:
+        """Run one prefill chunk for ``seq``; returns last-token logits
+        (meaningful only when the chunk completes the prompt)."""
+        full = seq.full_prompt
+        start = seq.n_prefilled
+        n = self.scheduler.chunk_for(seq)
+        padded = _pad_bucket(n)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :n] = full[start:start + n]
+        batch = {"tokens": jnp.asarray(toks)}
+        if start == 0 and n == seq.prefill_target:
+            # fresh one-shot prompt: nothing resident to attend over
+            logits, self.cache = self._prefill_fn(padded, 0)(
+                self.params, batch, self.cache,
+                jnp.asarray(seq.slot, jnp.int32),
+                jnp.asarray(n, jnp.int32))
+        else:
+            ctx_pages = min(
+                _pad_bucket(-(-(start + n) // self.page_size), lo=1),
+                self.max_pages)
+            logits, self.cache = self._prefill_fn(padded, ctx_pages)(
+                self.params, batch, self.cache,
+                jnp.asarray(seq.slot, jnp.int32),
+                jnp.asarray(n, jnp.int32),
+                jnp.asarray(start, jnp.int32))
+        seq.n_prefilled += n
+        return logits
 
     # ------------------------------------------------------------------
     def generate(self, requests: Sequence[Request], *,
@@ -126,6 +228,8 @@ class ContinuousServingEngine:
         clock0 = time.perf_counter()
         now = 0.0
         prefill_s = decode_s = 0.0
+        t_last_decode = None
+        self.decode_gaps_s = []
         meta: Dict[int, Dict[str, float]] = {}   # uid -> timing stamps
         done: List[Completion] = []
 
@@ -137,6 +241,7 @@ class ContinuousServingEngine:
                 meta[seq.uid] = {"t0": clock0 + t_arr}
 
             plan = sched.step(now)
+            self._apply_copies()
             for seq in plan.finished:
                 m = meta[seq.uid]
                 done.append(Completion(
@@ -151,21 +256,19 @@ class ContinuousServingEngine:
             for seq in plan.prefills:
                 t0 = time.perf_counter()
                 prompt = seq.full_prompt
-                padded = _pad_bucket(len(prompt))
-                toks = np.zeros((1, padded), np.int32)
-                toks[0, :len(prompt)] = prompt
-                logits, self.cache = self._prefill_fn(padded)(
-                    self.params, {"tokens": jnp.asarray(toks)}, self.cache,
-                    jnp.asarray(seq.slot, jnp.int32),
-                    jnp.asarray(len(prompt), jnp.int32))
-                tok = int(np.asarray(sample(
-                    logits, seq.request.sampling, self._next_key()))[0, 0])
-                seq.generated.append(tok)
+                logits = self._run_prefill_chunk(seq)
+                if not seq.is_prefilling:       # final chunk: sample
+                    tok = int(np.asarray(sample(
+                        logits, seq.request.sampling,
+                        self._next_key()))[0, 0])
+                    seq.generated.append(tok)
+                    # prompt KV is resident now — index it for reuse
+                    pool.register_prefix(seq.uid, prompt)
                 dt = time.perf_counter() - t0
                 prefill_s += dt
                 m = meta[seq.uid]
                 m["prefill"] = m.get("prefill", 0.0) + dt
-                if seq.is_done(self.max_len):
+                if not seq.is_prefilling and seq.is_done(self.max_len):
                     m["t1"] = time.perf_counter()
 
             if plan.decodes:
@@ -186,7 +289,11 @@ class ContinuousServingEngine:
                     seq.generated.append(int(toks[seq.slot, 0]))
                     if seq.is_done(self.max_len):
                         meta[seq.uid]["t1"] = time.perf_counter()
-                decode_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                if t_last_decode is not None:
+                    self.decode_gaps_s.append(t1 - t_last_decode)
+                t_last_decode = t1
+                decode_s += t1 - t0
             elif not plan.prefills and pending:
                 # nothing runnable: wait for the next arrival
                 wait = pending[0][0] - (time.perf_counter() - clock0)

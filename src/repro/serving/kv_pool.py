@@ -1,13 +1,14 @@
-"""NUMA-aware paged KV-cache pool (host-side allocator).
+"""NUMA-aware paged KV-cache pool with refcounted prefix sharing.
 
 ArcLight's §2.3 memory discipline — pre-allocate node-bound pools at
 startup, then *bind* rather than *allocate* at runtime — applied to the
 serving KV cache.  The physical cache is a fixed pool of fixed-size
 **pages** (``page_size`` token slots each, all layers of a page
 co-resident on one NUMA node).  At runtime a sequence owns an ordered
-list of pages (its *block table*); admission, growth, and eviction move
-page *ownership* around on the host without ever moving cache bytes on
-the device.
+list of pages (its *block table*); admission, growth, sharing and
+eviction move page *references* around on the host without ever moving
+cache bytes on the device (the one exception: copy-on-write, which
+emits an explicit page-copy the engine applies).
 
 Placement is planned through :class:`repro.core.memory.MemoryManager`
 (``plan_kv_pages``), so KV pages sit in the same per-node accounting as
@@ -16,11 +17,33 @@ weights and activations: pages stripe round-robin across node pools and
 On TPU the "node" is a mesh shard; on CPU it is a NUMA node the engine
 would ``mbind`` the page's carve-out to.
 
-Invariants (property-tested in ``tests/test_serving_paged.py``):
+Prefix caching (the serving claim this PR lands): KV bytes are a pure
+function of ``(token values, absolute positions)``, so two requests
+whose prompts agree on a page-aligned prefix can point their block
+tables at the *same* physical pages.  The pool keeps a **prompt-prefix
+hash map** — a chain hash over full token blocks, so a block's key
+commits to everything before it — from which admission resolves how
+many resident pages a new prompt can reuse (:meth:`match_prefix` /
+:meth:`adopt_prefix`).  When the new prompt diverges from the cached
+content *mid-page*, the matching head of the divergent page is reused
+by **copy-on-write**: a fresh page is allocated, a ``(src, dst)`` copy
+is queued in :attr:`pending_copies`, and only the divergent suffix is
+recomputed.
 
-* a physical page is owned by at most one live sequence (no aliasing);
-* page 0 is never handed out — it is the device-side scratch page that
-  idle batch slots and padded prefill positions write into;
+Invariants (property-tested in ``tests/test_serving_paged.py`` and
+``tests/test_prefix_chunking.py``):
+
+* **scratch-page rule** — page 0 is never handed out: it is the
+  device-side scratch page that idle batch slots and padded prefill
+  positions write into;
+* **refcount lifecycle** — every page in any live block table has
+  refcount >= 1; a page returns to its node free-list exactly when its
+  refcount drops to 0 (and its prefix-map entries are forgotten then);
+  ``release``/``free`` only ever decrement, so a shared page outlives
+  any single owner;
+* **immutability of shared pages** — a page with refcount > 1 is never
+  written: writers go through :meth:`ensure_writable`, which swaps in a
+  private copy-on-write page first;
 * freed pages return to their node free-list and are reused (LIFO, so
   recently-touched — cache-warm — pages are preferred);
 * per-node live-byte accounting never exceeds the planned capacity.
@@ -29,7 +52,7 @@ Invariants (property-tested in ``tests/test_serving_paged.py``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.memory import MemoryManager
 
@@ -65,11 +88,117 @@ class KVPoolConfig:
         return -(-n_tokens // self.page_size)
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Outcome of a prompt-prefix lookup.
+
+    ``pages`` are resident full pages the prompt can share outright;
+    ``cow_src``/``cow_len`` describe a mid-page divergence: the first
+    ``cow_len`` tokens of the block *after* the shared pages match the
+    resident page ``cow_src``, so a copy-on-write clone of it saves
+    recomputing those tokens.  ``n_tokens`` is the total cached-token
+    count (``len(pages) * page_size + cow_len``) — prefill resumes at
+    this offset.
+    """
+
+    pages: Tuple[int, ...] = ()
+    n_tokens: int = 0
+    cow_src: Optional[int] = None
+    cow_len: int = 0
+
+
+_CHAIN_ROOT = 0x9E3779B97F4A7C15   # arbitrary non-zero chain seed
+
+
+class PrefixCache:
+    """Prompt-prefix hash map: token-block chain hash -> physical page.
+
+    Keys are *chain* hashes — block i's key commits to the contents of
+    blocks 0..i — so one flat dict resolves "longest shared prefix" by
+    walking the request's blocks in order.  ``_next`` maps a chain
+    prefix to *some* resident page that follows it, which is what
+    mid-page divergence (copy-on-write) compares against.  Entries are
+    content-verified on hit (``_tokens``) so a hash collision can only
+    cost a missed reuse, never a wrong one.
+
+    The map only ever points at **live** pages: the pool forgets a
+    page's entries the moment its refcount drops to 0 (resident-only
+    caching; retention of finished sequences' pages is a ROADMAP item).
+    """
+
+    def __init__(self, page_size: int) -> None:
+        self.page_size = page_size
+        self._full: Dict[int, int] = {}    # chain hash -> page id
+        self._next: Dict[int, int] = {}    # chain prefix -> following page
+        self._tokens: Dict[int, Tuple[int, ...]] = {}  # page -> its tokens
+        self._keys: Dict[int, List[Tuple[str, int]]] = {}  # page -> entries
+
+    def __len__(self) -> int:
+        return len(self._full)
+
+    def register(self, tokens: Sequence[int],
+                 pages: Sequence[int]) -> None:
+        """Index every *full* token block of a resident prompt."""
+        ps = self.page_size
+        h = _CHAIN_ROOT
+        for i in range(len(tokens) // ps):
+            blk = tuple(tokens[i * ps:(i + 1) * ps])
+            key = hash((h, blk))
+            pid = pages[i]
+            if key not in self._full:
+                self._full[key] = pid
+                self._tokens.setdefault(pid, blk)
+                self._keys.setdefault(pid, []).append(("full", key))
+            if h not in self._next:
+                self._next[h] = pid
+                self._tokens.setdefault(pid, blk)
+                self._keys.setdefault(pid, []).append(("next", h))
+            h = key
+
+    def match(self, tokens: Sequence[int], limit: int) -> PrefixMatch:
+        """Longest resident prefix of ``tokens[:limit]``, full pages
+        first, then a token-wise compare inside the divergent block."""
+        ps = self.page_size
+        pages: List[int] = []
+        h = _CHAIN_ROOT
+        for i in range(limit // ps):
+            blk = tuple(tokens[i * ps:(i + 1) * ps])
+            key = hash((h, blk))
+            pid = self._full.get(key)
+            if pid is None or self._tokens.get(pid) != blk:
+                break
+            pages.append(pid)
+            h = key
+        matched = len(pages) * ps
+        cand = self._next.get(h)
+        cow_src, cow_len = None, 0
+        if cand is not None and matched < limit:
+            cand_toks = self._tokens.get(cand, ())
+            tail = tokens[matched:limit]
+            for a, b in zip(cand_toks, tail):
+                if a != b:
+                    break
+                cow_len += 1
+            if cow_len:
+                cow_src = cand
+        return PrefixMatch(pages=tuple(pages), n_tokens=matched + cow_len,
+                           cow_src=cow_src, cow_len=cow_len)
+
+    def forget(self, pid: int) -> None:
+        for kind, key in self._keys.pop(pid, []):
+            table = self._full if kind == "full" else self._next
+            if table.get(key) == pid:
+                del table[key]
+        self._tokens.pop(pid, None)
+
+
 class KVCachePool:
-    """Free-list page allocator with per-sequence block tables."""
+    """Free-list page allocator with refcounted, prefix-shared block
+    tables (see module docstring for the invariants)."""
 
     def __init__(self, cfg: KVPoolConfig,
-                 mm: Optional[MemoryManager] = None) -> None:
+                 mm: Optional[MemoryManager] = None, *,
+                 prefix_cache: bool = True) -> None:
         if cfg.n_pages < 2:
             raise ValueError("need at least one usable page besides scratch")
         self.cfg = cfg
@@ -80,14 +209,27 @@ class KVCachePool:
         for pid in range(cfg.n_pages - 1, 0, -1):   # page 0 stays reserved
             self._free.setdefault(self.mm.kv_page_node(pid), []).append(pid)
         self._pages: Dict[int, List[int]] = {}      # seq uid -> logical order
-        self._owner: Dict[int, int] = {}            # page id -> seq uid
+        self._ref: Dict[int, int] = {}              # page id -> refcount
+        self.prefix = PrefixCache(cfg.page_size) if prefix_cache else None
+        #: device page copies the engine must apply before the next
+        #: forward pass: list of (src page id, dst page id)
+        self.pending_copies: List[Tuple[int, int]] = []
+        self.stats: Dict[str, int] = {
+            "fresh_pages": 0,      # pages handed out from the free lists
+            "shared_pages": 0,     # block-table entries served by sharing
+            "cow_copies": 0,       # copy-on-write page clones
+            "cached_tokens": 0,    # prompt tokens whose prefill was skipped
+        }
 
     # ------------------------------------------------------------------
     def n_free(self) -> int:
         return sum(len(v) for v in self._free.values())
 
     def n_live(self) -> int:
-        return len(self._owner)
+        return len(self._ref)
+
+    def refcount(self, pid: int) -> int:
+        return self._ref.get(pid, 0)
 
     def can_grow(self, uid: int, n_tokens: int) -> bool:
         need = self.cfg.pages_for(n_tokens) - len(self._pages.get(uid, []))
@@ -104,10 +246,12 @@ class KVCachePool:
 
     # ------------------------------------------------------------------
     def grow(self, uid: int, n_tokens: int, *, node_hint: int = 0) -> bool:
-        """Ensure ``uid`` owns pages covering ``n_tokens`` token slots.
+        """Ensure ``uid``'s block table covers ``n_tokens`` token slots.
 
-        Returns False (allocating nothing) when the free pool cannot
-        cover the growth — the scheduler then preempts somebody.
+        Shared (prefix-adopted) pages count toward coverage, so only the
+        uncached tail allocates.  Returns False (allocating nothing)
+        when the free pool cannot cover the growth — the scheduler then
+        preempts somebody.
         """
         pages = self._pages.setdefault(uid, [])
         need = self.cfg.pages_for(n_tokens) - len(pages)
@@ -122,27 +266,131 @@ class KVCachePool:
             return False
         for _ in range(need):
             pid = self._take_page(node_hint)
-            self._owner[pid] = uid
+            self._ref[pid] = 1
+            self.stats["fresh_pages"] += 1
             pages.append(pid)
         return True
 
     def free(self, uid: int) -> int:
-        """Release all of a sequence's pages; returns how many."""
+        """Drop all of ``uid``'s page references; returns how many pages
+        actually went back to the free lists (shared pages survive until
+        their last reference is released)."""
         pages = self._pages.pop(uid, [])
+        freed = 0
         for pid in pages:       # stack top = last-written (warmest) page
-            del self._owner[pid]
-            self._free[self.mm.kv_page_node(pid)].append(pid)
-        return len(pages)
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                del self._ref[pid]
+                if self.prefix is not None:
+                    self.prefix.forget(pid)
+                self._free[self.mm.kv_page_node(pid)].append(pid)
+                freed += 1
+        if freed and self.pending_copies:
+            # a queued clone whose target died (admission rollback,
+            # same-step preemption) must not clobber the page's next owner
+            self.pending_copies = [(s, d) for s, d in self.pending_copies
+                                   if d in self._ref]
+        return freed
+
+    #: protocol alias — ``share_pages`` attaches references,
+    #: ``release`` drops them
+    release = free
 
     def block_table(self, uid: int) -> List[int]:
         return list(self._pages.get(uid, []))
+
+    # ------------------------------------------------------------------
+    # prefix sharing protocol
+    # ------------------------------------------------------------------
+    def share_pages(self, uid: int, pages: Sequence[int]) -> None:
+        """Append references to already-live ``pages`` onto ``uid``'s
+        block table (refcount + 1 each).  The pages become immutable for
+        every holder until refcounts fall back to 1 (`ensure_writable`)."""
+        table = self._pages.setdefault(uid, [])
+        for pid in pages:
+            if pid == 0 or pid not in self._ref:
+                raise ValueError(f"page {pid} is not live (cannot share)")
+            self._ref[pid] += 1
+            table.append(pid)
+            self.stats["shared_pages"] += 1
+
+    def match_prefix(self, tokens: Sequence[int]) -> PrefixMatch:
+        """Longest reusable resident prefix of a prompt.
+
+        Capped at ``len(tokens) - 1``: at least one prompt token is
+        always left to prefill, so (a) there are logits to sample the
+        first output token from and (b) the page receiving the next
+        write is never a shared one.
+        """
+        if self.prefix is None or len(tokens) < 2:
+            return PrefixMatch()
+        return self.prefix.match(tokens, len(tokens) - 1)
+
+    def adopt_prefix(self, uid: int, match: PrefixMatch, *,
+                     node_hint: int = 0) -> bool:
+        """Attach a :meth:`match_prefix` result to a fresh sequence:
+        share the full pages and, on mid-page divergence, allocate the
+        copy-on-write clone (queueing its device copy).  Returns False —
+        leaving ``uid`` untouched — when the clone cannot be allocated.
+        """
+        if self._pages.get(uid):
+            raise ValueError(f"uid {uid} already holds pages")
+        if match.cow_src is not None and self.n_free() == 0:
+            return False
+        if match.pages:
+            self.share_pages(uid, match.pages)
+        if match.cow_src is not None:
+            dst = self._take_page(node_hint)
+            self._ref[dst] = 1
+            self.stats["fresh_pages"] += 1
+            self.stats["cow_copies"] += 1
+            self._pages[uid].append(dst)
+            self.pending_copies.append((match.cow_src, dst))
+        self.stats["cached_tokens"] += match.n_tokens
+        return True
+
+    def register_prefix(self, uid: int, tokens: Sequence[int]) -> None:
+        """Index ``uid``'s now-resident prompt pages for future reuse
+        (call once the prefill that filled them has run)."""
+        if self.prefix is not None:
+            self.prefix.register(tokens, self._pages.get(uid, []))
+
+    def ensure_writable(self, uid: int, pos: int, *,
+                        node_hint: int = 0) -> bool:
+        """Copy-on-write guard: make the page holding token slot ``pos``
+        private to ``uid`` before it is written.  No-op for refcount-1
+        pages; for shared pages, swaps in a fresh clone and queues the
+        device copy.  Returns False when the pool has no page for the
+        clone (caller preempts, exactly like a failed ``grow``)."""
+        table = self._pages.get(uid, [])
+        li = pos // self.cfg.page_size
+        if li >= len(table):
+            raise ValueError(f"uid {uid} pos {pos} beyond its block table")
+        pid = table[li]
+        if self._ref[pid] == 1:
+            return True
+        if self.n_free() == 0:
+            return False
+        dst = self._take_page(node_hint)
+        self._ref[dst] = 1
+        self.stats["fresh_pages"] += 1
+        self.stats["cow_copies"] += 1
+        self._ref[pid] -= 1
+        table[li] = dst
+        self.pending_copies.append((pid, dst))
+        return True
+
+    def drain_copies(self) -> List[Tuple[int, int]]:
+        """Hand the queued (src, dst) page copies to the engine."""
+        out, self.pending_copies = self.pending_copies, []
+        return out
 
     # ------------------------------------------------------------------
     # accounting
     # ------------------------------------------------------------------
     def live_bytes_per_node(self) -> Dict[int, int]:
         out = {n: 0 for n in self._free}
-        for pid in self._owner:
+        for pid in self._ref:
             out[self.mm.kv_page_node(pid)] += self.cfg.page_bytes
         return out
 

@@ -9,8 +9,15 @@ sequences, and at every decode step
 
 * **evict** finished sequences (their slot and KV pages free instantly),
 * **admit** waiting requests into free slots when the KV pool can cover
-  their prompt (FCFS; prefill interleaves with ongoing decode),
-* **grow** each running sequence by one token slot, **preempting** the
+  their prompt (FCFS) — admission is **prefix-aware**: the pool's
+  prompt-prefix map is consulted first and matched pages are *shared*,
+  not allocated, so cached pages never count against the free-page
+  budget and a request whose prompt is mostly cached admits into a
+  nearly-full pool;
+* run one **prefill chunk** (``prefill_chunk`` tokens) for every
+  sequence whose prompt KV is not yet fully resident — long prompts
+  spread over many steps instead of stalling the decode batch,
+* **grow** each decoding sequence by one token slot, **preempting** the
   youngest-arrival sequence (recompute-style: its pages are freed and
   the whole prefix re-queues) when the pool is exhausted.
 
@@ -19,8 +26,25 @@ pure data (block tables, position vectors) — the compiled decode step
 never re-specialises.  The scheduler is deliberately jax-free: it
 manipulates the :class:`~repro.serving.kv_pool.KVCachePool` and emits
 :class:`Schedule` decisions; the engine turns decisions into device
-calls.  Policies beyond FCFS (priority, SLA-aware, prefix-sharing
-admission) slot in behind ``policy=`` — see ROADMAP "Open items".
+calls.  Policies beyond FCFS (priority, SLA-aware) slot in behind
+``policy=`` — see ROADMAP "Open items".
+
+Invariants the engine relies on:
+
+* **preemption ordering** — a preempted sequence's pages are released
+  *before* anything else allocates in the same step, its ``slot``
+  resets to -1, and it re-queues by original arrival time; its restart
+  prompt (``full_prompt``) carries previously generated tokens so the
+  recompute is exact;
+* a sequence appears in exactly one of ``prefills`` / ``decodes`` per
+  step, and only sequences with fully-resident prompts decode;
+* admission reserves pages for the *whole* prompt plus one decode
+  token up front, so a mid-prefill sequence never grows (and a fresh
+  admission can never instantly re-preempt itself);
+* every page about to be written this step has refcount 1 — shared
+  pages are cloned first via ``ensure_writable`` (copy-on-write), and
+  the prefix-match cap (``match_prefix`` leaves >= 1 prompt token
+  uncached) keeps prompt writes out of shared pages structurally.
 """
 
 from __future__ import annotations
@@ -42,7 +66,9 @@ class Sequence:                     # one admission ticket, never a value
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1                  # -1 = not running
     n_prefilled: int = 0            # tokens whose KV is resident
+    prefill_target: int = 0         # prompt length being prefilled
     n_preempts: int = 0
+    n_cached_tokens: int = 0        # prefix-cache hits at last admission
     t_first_sched: float = -1.0     # first time it got a slot
 
     @property
@@ -60,6 +86,10 @@ class Sequence:                     # one admission ticket, never a value
         """Absolute position of the next token to be fed/decoded."""
         return len(self.request.prompt) + len(self.generated)
 
+    @property
+    def is_prefilling(self) -> bool:
+        return self.n_prefilled < self.prefill_target
+
     def is_done(self, max_len: int) -> bool:
         sp = self.request.sampling
         if len(self.generated) >= sp.max_new_tokens:
@@ -72,7 +102,12 @@ class Sequence:                     # one admission ticket, never a value
 
 @dataclasses.dataclass
 class Schedule:
-    """One step's decisions, in execution order."""
+    """One step's decisions, in execution order.
+
+    ``prefills`` holds every sequence that should run one prefill chunk
+    this step (``n_prefilled`` -> engine's resume offset); ``decodes``
+    holds the fully-prefilled rest of the running batch.
+    """
 
     finished: List[Sequence] = dataclasses.field(default_factory=list)
     preempted: List[Sequence] = dataclasses.field(default_factory=list)
@@ -82,13 +117,17 @@ class Schedule:
 
 class ContinuousScheduler:
     def __init__(self, pool: KVCachePool, *, max_running: int,
-                 max_len: int, policy: str = "fcfs") -> None:
+                 max_len: int, policy: str = "fcfs",
+                 prefill_chunk: Optional[int] = None) -> None:
         if policy != "fcfs":
             raise ValueError(f"unknown policy {policy!r}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.pool = pool
         self.max_running = max_running
         self.max_len = max_len
         self.policy = policy
+        self.prefill_chunk = prefill_chunk
         self.waiting: Deque[Sequence] = deque()
         self.running: Dict[int, Sequence] = {}      # slot -> Sequence
         self._free_slots = list(range(max_running - 1, -1, -1))
@@ -102,6 +141,13 @@ class ContinuousScheduler:
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    def chunk_for(self, seq: Sequence) -> int:
+        """Tokens the engine should prefill for ``seq`` this step."""
+        remaining = seq.prefill_target - seq.n_prefilled
+        if self.prefill_chunk is None:
+            return remaining
+        return min(self.prefill_chunk, remaining)
 
     def _slot_node(self, slot: int) -> int:
         """Home-node hint: stripe slots across the pool's nodes so each
@@ -118,6 +164,31 @@ class ContinuousScheduler:
                 return
         self.waiting.append(seq)
 
+    def _admit(self, seq: Sequence, slot: int) -> bool:
+        """Reserve KV for ``seq``'s whole prompt + one decode token,
+        sharing every prefix-cached page instead of allocating it."""
+        pool = self.pool
+        prompt = seq.full_prompt
+        need_total = pool.cfg.pages_for(len(prompt) + 1)
+        if need_total > pool.cfg.max_pages_per_seq:
+            raise ValueError(
+                f"request {seq.uid}: prompt needs {need_total} pages; "
+                f"pool only has {pool.cfg.max_pages_per_seq}")
+        match = pool.match_prefix(prompt)
+        # prefix-aware budget: cached pages are shared, not allocated
+        if need_total - len(match.pages) > pool.n_free():
+            return False
+        hint = self._slot_node(slot)
+        if not pool.adopt_prefix(seq.uid, match, node_hint=hint):
+            return False
+        if not pool.grow(seq.uid, len(prompt) + 1, node_hint=hint):
+            pool.release(seq.uid)   # roll back the adopted references
+            return False
+        seq.n_prefilled = match.n_tokens
+        seq.n_cached_tokens = match.n_tokens
+        seq.prefill_target = len(prompt)
+        return True
+
     # ------------------------------------------------------------------
     def step(self, now: float = 0.0) -> Schedule:
         """Plan one engine step.  Order matters: evict, admit, grow."""
@@ -126,10 +197,10 @@ class ContinuousScheduler:
         # 1. evict finished sequences — slot and pages free immediately
         for slot in sorted(self.running):
             seq = self.running[slot]
-            if seq.is_done(self.max_len):
+            if not seq.is_prefilling and seq.is_done(self.max_len):
                 del self.running[slot]
                 self._free_slots.append(slot)
-                self.pool.free(seq.uid)
+                self.pool.release(seq.uid)
                 seq.slot = -1
                 sched.finished.append(seq)
 
@@ -137,31 +208,35 @@ class ContinuousScheduler:
         while (self.waiting and self._free_slots
                and self.waiting[0].arrival <= now):
             seq = self.waiting[0]
-            # reserve the prompt plus one decode token so admission can
-            # never instantly re-preempt itself
             slot = self._free_slots[-1]
-            if not self.pool.grow(seq.uid, len(seq.full_prompt) + 1,
-                                  node_hint=self._slot_node(slot)):
+            if not self._admit(seq, slot):
                 break
             self.waiting.popleft()
             self._free_slots.pop()
             seq.slot = slot
-            seq.n_prefilled = len(seq.full_prompt)
             if seq.t_first_sched < 0:
                 seq.t_first_sched = now
             self.running[slot] = seq
-            sched.prefills.append(seq)
 
-        # 3. grow every running sequence for this step's token write;
+        # 3. every sequence whose prompt KV is not fully resident runs
+        #    one prefill chunk this step (freshly admitted ones included)
+        for slot in sorted(self.running):
+            if self.running[slot].is_prefilling:
+                sched.prefills.append(self.running[slot])
+
+        # 4. grow every decoding sequence for this step's token write;
         #    preempt youngest arrivals when the pool runs dry
         for slot in sorted(list(self.running)):
             seq = self.running.get(slot)
             if seq is None:                 # preempted earlier in this loop
                 continue
-            if seq in sched.prefills:       # already covered by admission
+            if seq in sched.prefills:       # reservation made at admission
                 continue
-            while not self.pool.grow(seq.uid, seq.next_pos + 1,
-                                     node_hint=self._slot_node(slot)):
+            hint = self._slot_node(slot)
+            while not (self.pool.grow(seq.uid, seq.next_pos + 1,
+                                      node_hint=hint)
+                       and self.pool.ensure_writable(
+                           seq.uid, seq.next_pos - 1, node_hint=hint)):
                 victim = self._pick_victim(exclude=seq)
                 if victim is None:
                     raise RuntimeError(
@@ -169,7 +244,7 @@ class ContinuousScheduler:
                         "raise n_pages or lower max_len")
                 self._preempt(victim)
                 sched.preempted.append(victim)
-                if victim.slot == -1 and victim in sched.prefills:
+                if victim in sched.prefills:
                     sched.prefills.remove(victim)
 
         sched.decodes = [self.running[s] for s in sorted(self.running)
@@ -189,7 +264,8 @@ class ContinuousScheduler:
         seq.n_preempts += 1
         del self.running[seq.slot]
         self._free_slots.append(seq.slot)
-        self.pool.free(seq.uid)
+        self.pool.release(seq.uid)
         seq.slot = -1
         seq.n_prefilled = 0
+        seq.prefill_target = 0
         self._requeue(seq)

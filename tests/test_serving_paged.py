@@ -137,6 +137,7 @@ class TestScheduler:
         plan = s.step()
         assert [q.uid for q in plan.prefills] == [0]
         seq = plan.prefills[0]
+        seq.n_prefilled = seq.prefill_target   # engine ran the prefill
         seq.generated.append(42)          # hits max_new_tokens
         plan = s.step()
         assert [q.uid for q in plan.finished] == [0]
@@ -152,6 +153,7 @@ class TestScheduler:
         plan = s.step(now=2.0)
         assert {q.uid for q in plan.prefills} == {0, 1}
         for seq in (a, b):
+            seq.n_prefilled = seq.prefill_target   # engine ran the prefill
             seq.generated.extend([7] * 4)     # decode to a page boundary
         plan = s.step(now=3.0)
         assert [q.uid for q in plan.preempted] == [1], "youngest loses"

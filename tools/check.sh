@@ -1,21 +1,74 @@
 #!/usr/bin/env bash
 # PR gate: tier-1 tests + a short continuous-serving smoke so the
-# paged-KV scheduler path is exercised on every change.
+# paged-KV scheduler path is exercised on every change, plus a doc-link
+# check so README.md / docs/*.md never reference a module path or CLI
+# flag that no longer exists.
 #
-#   tools/check.sh            # full tier-1 + serving smoke
+#   tools/check.sh            # full tier-1 + serving smoke + doc check
 #   tools/check.sh --smoke    # serving smoke only (~30 s)
+#   tools/check.sh --docs     # doc-link check only (<1 s)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+doc_check() {
+    echo "== doc check: module paths and CLI flags =="
+    local docs=(README.md docs/*.md) fail=0
+
+    # 1. literal file paths like src/repro/serving/kv_pool.py
+    for p in $(grep -hoE 'src/repro/[A-Za-z0-9_/.-]+\.py' "${docs[@]}" \
+                   | sort -u); do
+        if [[ ! -f "$p" ]]; then
+            echo "doc-check: missing file referenced in docs: $p"
+            fail=1
+        fi
+    done
+
+    # 2. dotted module paths like repro.launch.serve (last component may
+    #    be an attribute, so also accept the parent resolving)
+    for m in $(grep -hoE '\brepro\.[a-z0-9_.]+[a-z0-9_]' "${docs[@]}" \
+                   | sort -u); do
+        local f="src/${m//./\/}" parent
+        parent="$(dirname "$f")"
+        if [[ ! -f "$f.py" && ! -d "$f" && ! -f "$parent.py" \
+              && ! -d "$parent" ]]; then
+            echo "doc-check: missing module referenced in docs: $m"
+            fail=1
+        fi
+    done
+
+    # 3. CLI flags like --prefill-chunk must appear in some source file
+    #    under src/, benchmarks/ or tools/ (argparse / script flags)
+    for flag in $(grep -hoE '(^|[^-])--[a-z][a-z0-9-]+' "${docs[@]}" \
+                      | grep -oE '\-\-[a-z][a-z0-9-]+' | sort -u); do
+        if ! grep -rqF -- "\"$flag\"" src benchmarks tools; then
+            echo "doc-check: flag $flag in docs but not in any CLI"
+            fail=1
+        fi
+    done
+
+    if [[ "$fail" != 0 ]]; then
+        echo "doc check: FAILED"
+        return 1
+    fi
+    echo "doc check: OK"
+}
+
+if [[ "${1:-}" == "--docs" ]]; then
+    doc_check
+    exit 0
+fi
+
 if [[ "${1:-}" != "--smoke" ]]; then
+    doc_check
     echo "== tier-1: pytest =="
     python -m pytest -x -q
 fi
 
 echo "== serving smoke: continuous engine, tiny arch =="
 python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \
-    --max-new 8 --max-running 4 --page-size 8 --warmup-steps 0
+    --max-new 8 --max-running 4 --page-size 8 --prefill-chunk 16 \
+    --warmup-steps 0
 echo "== serving smoke: bucket baseline parity path =="
 python -m repro.launch.serve --arch qwen3-1.7b --engine bucket \
     --max-new 8 --warmup-steps 0
