@@ -46,7 +46,6 @@ def engine_rows() -> List[Row]:
 
 
 def serving_rows() -> List[Row]:
-    from repro.data.pipeline import PackedLMDataset
     from repro.models import ModelConfig, build_model
     from repro.serving.engine import Request, ServingEngine, \
         throughput_report

@@ -16,10 +16,9 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.numa import (KUNPENG_920_4NODE, QWEN3_4B,
-                             async_gain_tokens_per_s, fig10_single_node,
-                             fig11_multi_node, fig12_13_long_prompt,
-                             headline_gain)
+from repro.core.numa import (KUNPENG_920_4NODE, async_gain_tokens_per_s,
+                             fig10_single_node, fig11_multi_node,
+                             fig12_13_long_prompt, headline_gain)
 from repro.core.threads import SyncSchedule
 
 

@@ -24,6 +24,26 @@ follow-ons (see ``docs/serving.md``):
   serving_chunk.*    long-prompt admission into a busy decode batch,
                      one-shot vs chunked prefill: max wall gap between
                      consecutive decode steps (chunking bounds it)
+
+The scan-escape section is the evidence for the per-layer paged-cache
+layout (``Model.init_cache`` docstring, docs/serving.md "Cache memory
+layout"): per-step cost must be **flat in pool size** at fixed touched
+bytes —
+
+  serving_scan_escape.decode_step_ms.pN    compiled decode step, pool
+                     swept 64 -> 512 pages (8x), same 4-sequence batch
+  serving_scan_escape.prefill_chunk_ms.pN  compiled 16-token resumed
+                     prefill chunk over the same sweep
+  serving_scan_escape.*_flatness           t(p512) / t(p64), ~1 = flat
+  serving_scan_escape.nodonate.*           same decode step WITHOUT
+                     buffer donation: XLA must copy every pool buffer
+                     per call — the O(pool bytes) behaviour the paged
+                     engine escaped (real-model "before" anchor)
+  serving_scan_escape.micro.*              XLA microbench of just the
+                     cache update: the old stacked-pool-through-
+                     lax.scan-carry layout (O(pool bytes) copy floor,
+                     scaling ~= pool ratio) vs the per-layer unrolled
+                     layout (in-place row scatter, flat)
 """
 
 from __future__ import annotations
@@ -177,10 +197,10 @@ def serving_chunk_rows() -> List[Row]:
                      sampling=SamplingParams(max_new_tokens=8))
     arrivals = [0.0] * 4 + [0.15]               # long prompt mid-decode
     max_len = 1024
-    # size the pool to the workload's true peak (4 shorts + the long
-    # prompt), not to max_running * max_len: every engine call pays an
-    # O(pool bytes) cache materialisation (ROADMAP: paged pool in the
-    # layer scan), so an oversized pool drowns the signal in memcpy
+    # pool sized to the workload's true peak (4 shorts + the long
+    # prompt).  Since the scan-escape layout, per-step cost is flat in
+    # pool size (see serving_scan_escape below), so this is now just a
+    # memory choice — kept at the PR 2 value so anchors stay comparable
     n_pages = 208
 
     gaps = {}
@@ -205,8 +225,199 @@ def serving_chunk_rows() -> List[Row]:
     ]
 
 
+def _best_of(fn, *, repeats: int = 3, steps: int = 16) -> float:
+    """Best-of-``repeats`` mean seconds per call of ``fn(steps)``."""
+    best = float("inf")
+    for _ in range(repeats):
+        best = min(best, fn(steps) / steps)
+    return best
+
+
+def serving_scan_escape_rows() -> List[Row]:
+    """Per-step cost vs pool size at fixed touched bytes.
+
+    Builds the same 4-sequence paged batch (32 resident tokens each)
+    over page pools of 64 -> 512 pages and times the compiled decode
+    step and a resumed 16-token prefill chunk.  With the per-layer
+    scan-escape cache layout both must be flat in pool size; the micro
+    pair isolates why — a stacked (L, rows, H, D) pool threaded through
+    a ``lax.scan`` carry pays an O(pool bytes) ys copy per call, while
+    the unrolled per-layer buffers update in place under donation.
+    """
+    import functools
+
+    from repro.models import ModelConfig, build_model
+
+    cfg = ModelConfig(name="bench-tiny", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ps, B, ctx, max_len = 8, 4, 32, 64
+    pages_per_slot = ctx // ps + 1          # resident ctx + decode page
+    pools = (64, 128, 256, 512)
+
+    def make_cache(n_pages: int):
+        cache = model.init_cache(B, max_len, page_size=ps,
+                                 n_pages=n_pages)
+        bt = np.zeros((B, max_len // ps), np.int32)
+        for b in range(B):                  # pages 1.. are real; 0 scratch
+            bt[b, :pages_per_slot] = (1 + b * pages_per_slot
+                                      + np.arange(pages_per_slot))
+        cache["block_tables"] = jnp.asarray(bt)
+        return cache
+
+    decode = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                               page_size=ps),
+        donate_argnums=1)
+    toks = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.full((B,), ctx, jnp.int32)
+
+    def timed_loop(step_fn, state, steps):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state = step_fn(state)
+            jax.block_until_ready(state)
+        return time.perf_counter() - t0
+
+    dec_t = {}
+    for P in pools:
+        def run(steps, P=P):
+            # fresh pool per repeat: the previous repeat donated it away
+            logits, c = decode(params, make_cache(P), toks, pos)
+            jax.block_until_ready(logits)
+            return timed_loop(
+                lambda c: decode(params, c, toks, pos)[1], c, steps)
+
+        dec_t[P] = _best_of(run, steps=50)
+
+    # "before" anchor at the real-model level: the same step without
+    # donation forces XLA to copy every pool buffer each call, which is
+    # the O(pool bytes) floor the stacked scan-carry layout paid too
+    decode_nd = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                               page_size=ps))
+    nd_t = {}
+    for P in (pools[0], pools[-1]):
+        def run(steps, P=P):
+            cache = make_cache(P)
+            logits, _ = decode_nd(params, cache, toks, pos)
+            jax.block_until_ready(logits)
+            return timed_loop(
+                lambda c: decode_nd(params, c, toks, pos)[1], cache,
+                steps)
+
+        nd_t[P] = _best_of(run, steps=50)
+
+    # resumed prefill chunk: 16 tokens at start=16, ctx bucket 8 pages
+    prefill = jax.jit(
+        lambda p, b, c, slot, plen, start: model.prefill_paged(
+            p, b, c, slot, plen, start=start, ctx_pages=8,
+            page_size=ps),
+        donate_argnums=2)
+    chunk = {"tokens": jnp.ones((1, 16), jnp.int32)}
+    pf_t = {}
+    zero = jnp.asarray(0, jnp.int32)
+    sixteen = jnp.asarray(16, jnp.int32)
+    for P in (pools[0], pools[-1]):
+        def run(steps, P=P):
+            logits, c = prefill(params, chunk, make_cache(P), zero,
+                                sixteen, sixteen)
+            jax.block_until_ready(logits)
+            return timed_loop(
+                lambda c: prefill(params, chunk, c, zero, sixteen,
+                                  sixteen)[1], c, steps)
+
+        pf_t[P] = _best_of(run, steps=32)
+
+    # --- micro pair: cache update alone, carry vs unrolled ---
+    L, H, D = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    rows = jnp.arange(B, dtype=jnp.int32) * ps + 1
+    newk = jnp.ones((B, H, D), jnp.float32)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def carry_step(pk, pv):
+        # the pre-refactor layout: stacked pool as scan xs -> ys forces
+        # a fresh O(pool bytes) ys allocation+copy every call
+        def body(_, kv):
+            k, v = kv
+            return None, (k.at[rows].set(newk), v.at[rows].set(newk))
+        _, out = jax.lax.scan(body, None, (pk, pv))
+        return out
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def unrolled_step(bufs):
+        return [(k.at[rows].set(newk), v.at[rows].set(newk))
+                for k, v in bufs]
+
+    micro = {}
+    for P in (pools[0], pools[-1]):
+        shape = (P * ps, H, D)
+
+        def run_carry(steps, shape=shape):
+            kv = carry_step(jnp.zeros((L,) + shape, jnp.float32),
+                            jnp.zeros((L,) + shape, jnp.float32))
+            jax.block_until_ready(kv)
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                kv = carry_step(*kv)
+            jax.block_until_ready(kv)
+            return time.perf_counter() - t0
+
+        def run_unrolled(steps, shape=shape):
+            b = unrolled_step([(jnp.zeros(shape, jnp.float32),
+                                jnp.zeros(shape, jnp.float32))
+                               for _ in range(L)])
+            jax.block_until_ready(b)
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                b = unrolled_step(b)
+            jax.block_until_ready(b)
+            return time.perf_counter() - t0
+
+        micro[P] = (_best_of(run_carry, steps=32),
+                    _best_of(run_unrolled, steps=32))
+
+    lo, hi = pools[0], pools[-1]
+    rows_out: List[Row] = []
+    for P in pools:
+        rows_out.append((f"serving_scan_escape.decode_step_ms.p{P}",
+                         dec_t[P] * 1e6, f"{dec_t[P] * 1e3:.3f}"))
+    rows_out += [
+        ("serving_scan_escape.decode_flatness", 0.0,
+         f"{dec_t[hi] / dec_t[lo]:.2f}"),
+        (f"serving_scan_escape.nodonate.decode_step_ms.p{lo}",
+         nd_t[lo] * 1e6, f"{nd_t[lo] * 1e3:.3f}"),
+        (f"serving_scan_escape.nodonate.decode_step_ms.p{hi}",
+         nd_t[hi] * 1e6, f"{nd_t[hi] * 1e3:.3f}"),
+        ("serving_scan_escape.nodonate.decode_scaling", 0.0,
+         f"{nd_t[hi] / max(nd_t[lo], 1e-12):.2f}"),
+        (f"serving_scan_escape.prefill_chunk_ms.p{lo}", pf_t[lo] * 1e6,
+         f"{pf_t[lo] * 1e3:.3f}"),
+        (f"serving_scan_escape.prefill_chunk_ms.p{hi}", pf_t[hi] * 1e6,
+         f"{pf_t[hi] * 1e3:.3f}"),
+        ("serving_scan_escape.prefill_flatness", 0.0,
+         f"{pf_t[hi] / pf_t[lo]:.2f}"),
+        (f"serving_scan_escape.micro.carry_ms.p{lo}", micro[lo][0] * 1e6,
+         f"{micro[lo][0] * 1e3:.3f}"),
+        (f"serving_scan_escape.micro.carry_ms.p{hi}", micro[hi][0] * 1e6,
+         f"{micro[hi][0] * 1e3:.3f}"),
+        ("serving_scan_escape.micro.carry_scaling", 0.0,
+         f"{micro[hi][0] / max(micro[lo][0], 1e-12):.2f}"),
+        (f"serving_scan_escape.micro.unrolled_ms.p{lo}",
+         micro[lo][1] * 1e6, f"{micro[lo][1] * 1e3:.3f}"),
+        (f"serving_scan_escape.micro.unrolled_ms.p{hi}",
+         micro[hi][1] * 1e6, f"{micro[hi][1] * 1e3:.3f}"),
+        ("serving_scan_escape.micro.unrolled_flatness", 0.0,
+         f"{micro[hi][1] / max(micro[lo][1], 1e-12):.2f}"),
+    ]
+    return rows_out
+
+
 def all_rows() -> List[Row]:
-    return serving_cb_rows() + serving_prefix_rows() + serving_chunk_rows()
+    return (serving_cb_rows() + serving_prefix_rows() +
+            serving_chunk_rows() + serving_scan_escape_rows())
 
 
 if __name__ == "__main__":

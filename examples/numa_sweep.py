@@ -10,11 +10,9 @@ Run:  PYTHONPATH=src python examples/numa_sweep.py
 
 import dataclasses
 
-import numpy as np
 
 from repro.core.numa import (KUNPENG_920_4NODE, QWEN3_4B, ModelTraffic,
-                             NumaTopology, decode_throughput,
-                             headline_gain)
+                             decode_throughput, headline_gain)
 
 
 def show_curve(label, topo, model, nodes, policy, sync="sync_b"):

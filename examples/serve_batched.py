@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python examples/serve_batched.py
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.pipeline import PackedLMDataset
 from repro.data.tokenizer import ByteTokenizer

@@ -13,7 +13,6 @@ Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--preset 100m]
 """
 
 import argparse
-import os
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ plan (`core.tp.PartitionPlan`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +31,8 @@ import numpy as np
 
 from .graph import ForwardGraph, GraphScheduler
 from .memory import MemoryManager, plan_graph_memory
-from .tensor import OpType, TensorBundle, TensorHeader
-from .threads import SyncSchedule, ThreadPool
+from .tensor import TensorBundle
+from .threads import ThreadPool
 
 
 @dataclasses.dataclass

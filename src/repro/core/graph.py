@@ -27,21 +27,12 @@ carries the thread-group and NUMA-pool assignment produced by
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .tensor import (
-    ALIASING_OPS,
-    OpType,
-    TensorBundle,
-    TensorHeader,
-    as_bundle,
-    make_header,
-)
+from .tensor import OpType, TensorBundle, TensorHeader, as_bundle, make_header
 
 
 class GraphError(RuntimeError):

@@ -22,7 +22,7 @@ is minimal under the parity policy, UMA vs NUMA placement bytes match).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from .tensor import OpType, TensorHeader
 

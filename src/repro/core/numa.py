@@ -27,12 +27,10 @@ defaults are calibrated to the paper's platform and reproduce Figs
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .threads import SyncSchedule, ThreadPool
 
 
 # ----------------------------------------------------------------------

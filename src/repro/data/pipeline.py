@@ -11,11 +11,11 @@ as numpy so the launcher can shard them onto the mesh
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from .tokenizer import ByteTokenizer, EOS_ID
+from .tokenizer import ByteTokenizer
 
 
 _SUBJECTS = ["the scheduler", "a numa node", "the tensor", "one thread",

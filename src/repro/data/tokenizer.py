@@ -4,7 +4,6 @@ from __future__ import annotations
 
 from typing import List, Sequence
 
-import numpy as np
 
 
 PAD_ID = 256

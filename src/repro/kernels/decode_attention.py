@@ -63,9 +63,9 @@ def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(s_idx == n_s - 1)
     def _finalize():
-        l = l_ref[...]
-        l = jnp.where(l > 0, l, 1.0)
-        o_ref[0, 0] = acc_ref[...] / l
+        denom = l_ref[...]
+        denom = jnp.where(denom > 0, denom, 1.0)
+        o_ref[0, 0] = acc_ref[...] / denom
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -152,9 +152,9 @@ def _paged_decode_attn_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref,
 
     @pl.when(p_idx == n_pages - 1)
     def _finalize():
-        l = l_ref[...]
-        l = jnp.where(l > 0, l, 1.0)
-        o_ref[0, 0] = acc_ref[...] / l
+        denom = l_ref[...]
+        denom = jnp.where(denom > 0, denom, 1.0)
+        o_ref[0, 0] = acc_ref[...] / denom
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
@@ -164,6 +164,9 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            interpret: bool = True) -> jax.Array:
     """q (B,H,G,D) × page pool k,v (P,ps,H,D) -> out (B,H,G,D) f32.
 
+    ``k_pages``/``v_pages`` are the paged view of ONE layer's flat pool
+    buffer — the ops wrapper (``repro.kernels.ops``) reshapes the
+    per-layer (P*ps, H, D) cache buffer before dispatching here.
     ``block_tables`` (B, max_pages) int32 and ``kv_lens`` (B,) int32 are
     scalar-prefetched so each grid step's BlockSpec index_map can DMA the
     *physical* page the sequence's logical page j maps to — the gather

@@ -11,7 +11,6 @@ import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from . import ref as _ref
 from .decode_attention import decode_attention as _decode_attention_kernel
@@ -56,24 +55,30 @@ def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, 1, Hq, D)
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "softcap"))
-def paged_gqa_decode_attention(q: jax.Array, k_pages: jax.Array,
-                               v_pages: jax.Array, block_tables: jax.Array,
+@functools.partial(jax.jit, static_argnames=("page_size", "impl",
+                                             "softcap"))
+def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
                                kv_lens: jax.Array, window=0, *,
-                               softcap: float = 0.0,
+                               page_size: int, softcap: float = 0.0,
                                impl: str = "auto") -> jax.Array:
     """Paged flash-decoding for one token per sequence with GQA.
 
-    q (B,1,Hq,D); k_pages,v_pages (P,ps,Hkv,D) shared page pool;
-    block_tables (B,max_pages); kv_lens (B,) -> out (B,1,Hq,D).  The
-    device-side read path of the serving KV pool
+    q (B,1,Hq,D); k_pool,v_pool (n_pages*page_size,Hkv,D) — ONE layer's
+    flat page-pool buffer, exactly as the per-layer paged cache holds it
+    (``Model.init_cache(page_size=...)``); the paged view is a free
+    reshape here.  block_tables (B,max_pages); kv_lens (B,) ->
+    out (B,1,Hq,D).  The device-side read path of the serving KV pool
     (``repro.serving.kv_pool``): K/V are addressed *through* the block
     table, so batch membership and sequence length change without
     recompilation or cache copies.
     """
     B, one, Hq, D = q.shape
-    Hkv = k_pages.shape[2]
+    Hkv = k_pool.shape[1]
     G = Hq // Hkv
+    n_pages = k_pool.shape[0] // page_size
+    k_pages = k_pool.reshape(n_pages, page_size, Hkv, D)
+    v_pages = v_pool.reshape(n_pages, page_size, Hkv, D)
     qk = q.reshape(B, Hkv, G, D)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         out = _ref.paged_decode_attention_ref(qk, k_pages, v_pages,

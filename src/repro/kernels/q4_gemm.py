@@ -21,7 +21,6 @@ M ∈ {1..batch}, far below the 128 sublane budget at these sizes.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -30,7 +30,7 @@ import jax
 
 from ..configs import SHAPES, list_archs
 from .mesh import CHIPS_PER_POD, make_production_mesh
-from .roofline import analyse, format_table
+from .roofline import analyse
 from .shardings import Policy
 from .specs import build_case
 

@@ -23,7 +23,6 @@ step).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -12,7 +12,7 @@ parallelism (2 pods × 256 chips).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh

@@ -22,9 +22,8 @@ global ``HLO_FLOPs × chips``.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 from ..models.config import ModelConfig
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16

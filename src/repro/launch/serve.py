@@ -55,11 +55,10 @@ def main() -> int:
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from ..configs import get_config, list_archs
-    from ..data.pipeline import PackedLMDataset, stub_frames, \
-        stub_image_embeds
+    from ..data.pipeline import (PackedLMDataset, stub_frames,
+                                 stub_image_embeds)
     from ..data.tokenizer import ByteTokenizer
     from ..models import build_model, reduced_config
     from ..serving import (ContinuousServingEngine, Request, ServingEngine,

@@ -27,7 +27,7 @@ Activation rules: batch over ("pod","data"); KV caches shard batch over
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

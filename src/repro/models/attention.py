@@ -12,7 +12,7 @@ architectures:
 * **decode** is the same function with Sq=1 and ``kv_len`` masking —
   flash-decoding over the cache;
 * **sequence-sharded decode** (long_500k, batch=1): each shard runs
-  blockwise attention over its KV slice and returns (out, m, l); the
+  blockwise attention over its KV slice and returns (out, m, lsum); the
   partials merge with an LSE-weighted psum (``combine_partials``) —
   ArcLight's Gather, applied to the sequence axis (beyond-paper
   optimisation, DESIGN.md §5).
@@ -24,9 +24,8 @@ together in tests.
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +39,7 @@ class AttnPartial(NamedTuple):
 
     out: jax.Array   # (B, Sq, Hq, D), fp32, = Σ exp(s - m) v
     m: jax.Array     # (B, Sq, Hq) running max
-    l: jax.Array     # (B, Sq, Hq) running denominator
+    lsum: jax.Array  # (B, Sq, Hq) running denominator
 
 
 def _chunk_mask(qpos: jax.Array, kpos: jax.Array, *, causal: bool,
@@ -111,7 +110,7 @@ def flash_attention(
     vc = v.reshape(B, n_chunks, chunk, Hkv, D)
 
     def body(carry, inputs):
-        out, m, l = carry
+        out, m, lsum = carry
         ci, kci, vci = inputs[:3]
         if pos_chunks is not None:
             kpos = inputs[3]
@@ -129,7 +128,7 @@ def flash_attention(
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))      # (B,Sq,Hkv,G)
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, axis=-1)
+        l_new = lsum * alpha + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bqhgc,bchd->bqhgd", p,
                         vci.astype(jnp.float32))
         out_new = out * alpha[..., None] + pv
@@ -142,14 +141,14 @@ def flash_attention(
           jnp.moveaxis(vc, 1, 0)]
     if pos_chunks is not None:
         xs.append(pos_chunks)
-    (out, m, l), _ = jax.lax.scan(body, (out0, m0, l0), tuple(xs))
+    (out, m, lsum), _ = jax.lax.scan(body, (out0, m0, l0), tuple(xs))
 
     out = out.reshape(B, Sq, Hq, D)
     m = m.reshape(B, Sq, Hq)
-    l = l.reshape(B, Sq, Hq)
+    lsum = lsum.reshape(B, Sq, Hq)
     if return_partial:
-        return AttnPartial(out=out, m=m, l=l)
-    safe_l = jnp.where(l > 0, l, 1.0)
+        return AttnPartial(out=out, m=m, lsum=lsum)
+    safe_l = jnp.where(lsum > 0, lsum, 1.0)
     return (out / safe_l[..., None]).astype(q.dtype)
 
 
@@ -160,7 +159,7 @@ def combine_partials(p: AttnPartial, axis_name: str,
     m_glob = jax.lax.pmax(p.m, axis_name)
     w = jnp.exp(p.m - m_glob)
     num = jax.lax.psum(p.out * w[..., None], axis_name)
-    den = jax.lax.psum(p.l * w, axis_name)
+    den = jax.lax.psum(p.lsum * w, axis_name)
     den = jnp.where(den > 0, den, 1.0)
     return (num / den[..., None]).astype(out_dtype)
 

@@ -7,7 +7,7 @@ projection is stored ``(d_in, d_out)`` and applied as ``x @ w``.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -23,8 +23,7 @@ structure, so gemma3's 5-local:1-global pattern stays in uniform mode.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax.numpy as jnp
 

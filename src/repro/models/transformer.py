@@ -27,14 +27,16 @@ the long_500k shapes (DESIGN.md §4).
 the continuous-batching engine: a shared physical page pool addressed
 through per-slot block tables, with ``prefill_paged`` /
 vector-position ``decode_step`` as the compiled entry points (see
-``init_cache`` and ``repro.serving.kv_pool`` for the layout).
+``init_cache`` and ``repro.serving.kv_pool`` for the layout).  The
+paged pool is held as **per-layer buffers run through an unrolled
+layer loop** (``_run_paged_layers``), never through the layer scan's
+carry — the scan would copy the whole pool every compiled step.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -42,9 +44,9 @@ import jax.numpy as jnp
 
 from jax.ad_checkpoint import checkpoint_name
 
-from .attention import AttnPartial, flash_attention
-from .common import (Params, cross_entropy, dense_init, embed_init,
-                     layer_norm, mlp, init_mlp, rms_norm, unembed)
+from .attention import flash_attention
+from .common import (Params, dense_init, embed_init, layer_norm, mlp, init_mlp,
+                     rms_norm, unembed)
 from .config import ModelConfig
 from .moe import init_moe, moe
 from .recurrent import RGLRUState, init_rglru_block, rglru_block
@@ -209,7 +211,7 @@ def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Slot-mapped cache write + block-table attention read.
 
-    ``cache['k']/['v']`` are flat views of the shared physical page pool
+    ``cache['k']/['v']`` are THIS layer's flat page-pool buffers
     ((n_pages * page_size, Hkv, D)); ``paged`` carries the per-call slot
     mapping (see ``Model.init_cache`` docstring).  Prefill (S > 1)
     scatters the fresh K/V rows to their physical slots; a one-shot
@@ -247,12 +249,9 @@ def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
     else:                                     # decode: one token per slot
         ck = cache["k"].at[write_slots].set(k[:, 0])
         cv = cache["v"].at[write_slots].set(v[:, 0])
-        n_pages = ck.shape[0] // ps
-        kp = ck.reshape(n_pages, ps, *ck.shape[1:])
-        vp = cv.reshape(n_pages, ps, *cv.shape[1:])
         out = paged_gqa_decode_attention(
-            q, kp, vp, paged["block_tables"], paged["kv_len"], window,
-            softcap=cfg.attn_logit_softcap)
+            q, ck, cv, paged["block_tables"], paged["kv_len"], window,
+            page_size=ps, softcap=cfg.attn_logit_softcap)
     return out, {"k": ck, "v": cv}
 
 
@@ -539,9 +538,15 @@ class Model:
         physical pool of ``n_pages`` fixed-size pages per layer and are
         addressed through it —
 
-        * ``layers..k/v``  (n_pages * page_size, Hkv, D) flat page pool
-          (page 0 is reserved scratch: idle batch slots and padded
-          prefill positions write there);
+        * ``layers[i].self.k/v``  (n_pages * page_size, Hkv, D) flat
+          page-pool buffer of layer ``i`` (page 0 is reserved scratch:
+          idle batch slots and padded prefill positions write there).
+          The layers are a **Python list of independent buffers**, not
+          one stacked (L, ...) array: each buffer is its own jit
+          argument/result, so the compiled step never threads the pool
+          through a ``lax.scan`` carry (which would copy O(pool bytes)
+          per call) and buffer donation lets XLA scatter the touched
+          rows in place — per-step cache traffic is O(touched bytes);
         * ``block_tables`` (batch, ceil(max_len / page_size)) int32 —
           physical page of each sequence's logical page, 0 = unmapped.
           Owned by the host-side allocator (``repro.serving.kv_pool``),
@@ -566,16 +571,14 @@ class Model:
             if n_pages is None:
                 n_pages = 1 + batch * max_pages   # page 0 is scratch
             hd = cfg.resolved_head_dim
-            pool = {"self": {
-                "k": jnp.zeros((n_pages * page_size, cfg.n_kv_heads, hd),
-                               cfg.dtype),
-                "v": jnp.zeros((n_pages * page_size, cfg.n_kv_heads, hd),
-                               cfg.dtype)}}
             return {
                 "block_tables": jnp.zeros((batch, max_pages), jnp.int32),
-                "layers": jax.tree.map(
-                    lambda x: jnp.broadcast_to(
-                        x[None], (cfg.n_layers,) + x.shape).copy(), pool),
+                "layers": [{"self": {
+                    "k": jnp.zeros((n_pages * page_size, cfg.n_kv_heads,
+                                    hd), cfg.dtype),
+                    "v": jnp.zeros((n_pages * page_size, cfg.n_kv_heads,
+                                    hd), cfg.dtype)}}
+                    for _ in range(cfg.n_layers)],
             }
         cl = min(cache_len or max_len, max_len)
         cache: Dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
@@ -618,7 +621,7 @@ class Model:
                      positions: jax.Array, caches: Optional[Params],
                      memory: Optional[jax.Array], *, causal: bool,
                      single_step: bool, window_override: Optional[int],
-                     decoder_cross: bool, kind: str, paged=None,
+                     decoder_cross: bool, kind: str,
                      ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
         cfg = self.cfg
         windows, thetas = self._stack_meta()
@@ -629,7 +632,7 @@ class Model:
             _layer_forward, cfg, kind, causal=causal,
             decoder_cross=decoder_cross, single_step=single_step,
             moe_hook=self.moe_hook, decode_hook=self.decode_attn_hook,
-            act_constraint=self.attn_act_constraint, paged=paged)
+            act_constraint=self.attn_act_constraint)
         if cfg.remat and caches is None:   # checkpoint each layer (train)
             fwd = jax.checkpoint(fwd, policy=_remat_policy(cfg))
 
@@ -664,7 +667,6 @@ class Model:
     def _run_blocks(self, layers: Params, x: jax.Array,
                     positions: jax.Array, caches, memory, *, causal: bool,
                     single_step: bool, window_override: Optional[int],
-                    paged=None,
                     ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
         """Scan over super-blocks of a periodic pattern (see __init__)."""
         cfg = self.cfg
@@ -683,7 +685,7 @@ class Model:
         fwd = functools.partial(
             _layer_forward, cfg, causal=causal, single_step=single_step,
             moe_hook=self.moe_hook, decode_hook=self.decode_attn_hook,
-            act_constraint=self.attn_act_constraint, paged=paged)
+            act_constraint=self.attn_act_constraint)
 
         def block_body(carry, xs):
             h, aux = carry
@@ -743,7 +745,6 @@ class Model:
                      positions: jax.Array, caches: Optional[List],
                      memory: Optional[jax.Array], *, causal: bool,
                      single_step: bool, window_override: Optional[int],
-                     paged=None,
                      ) -> Tuple[jax.Array, Optional[List], jax.Array]:
         cfg = self.cfg
         windows = cfg.layer_windows(0)
@@ -760,7 +761,7 @@ class Model:
                 _layer_forward, cfg, kind, causal=causal,
                 single_step=single_step, moe_hook=self.moe_hook,
                 decode_hook=self.decode_attn_hook,
-                act_constraint=self.attn_act_constraint, paged=paged)
+                act_constraint=self.attn_act_constraint)
             if cfg.remat and caches is None:   # per-layer remat (train)
                 fwd = jax.checkpoint(fwd)
             x, nc, a = fwd(
@@ -772,26 +773,70 @@ class Model:
                 new_caches.append(nc if nc is not None else {})
         return x, new_caches, aux
 
+    def _run_paged_layers(self, params: Params, x: jax.Array,
+                          positions: jax.Array, caches: List, *,
+                          single_step: bool,
+                          window_override: Optional[int], paged,
+                          ) -> Tuple[jax.Array, List, jax.Array]:
+        """Unrolled layer loop for the **paged** cache (uniform attn
+        stacks only, enforced by ``init_cache``).
+
+        ``caches`` is the per-layer buffer list: every layer's K/V pool
+        buffer enters and leaves the jit as its own argument/result
+        instead of riding a ``lax.scan`` carry.  The scan variant would
+        copy the whole stacked pool once per compiled call (an O(pool
+        bytes) floor on every decode step / prefill chunk — ROADMAP:
+        measured to dominate chunked prefill at 641 pages); unrolled,
+        each buffer's only write is a row scatter, so with the engine's
+        buffer donation XLA updates the pool in place and the step costs
+        O(touched bytes).  Layer *parameters* stay stacked (L, ...) —
+        the per-layer static slice below is the touched-bytes read XLA
+        fuses into the layer's matmuls.
+        """
+        cfg = self.cfg
+        windows = list(cfg.layer_windows(0))
+        thetas = list(cfg.layer_thetas())
+        if window_override is not None:
+            windows = [window_override] * cfg.n_layers
+        fwd = functools.partial(
+            _layer_forward, cfg, self.kinds[0], causal=True,
+            single_step=single_step, moe_hook=self.moe_hook,
+            decode_hook=self.decode_attn_hook,
+            act_constraint=self.attn_act_constraint, paged=paged)
+        layers = params["layers"]
+        aux = jnp.zeros((), jnp.float32)
+        new_caches: List = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], layers)
+            if self.param_constraint is not None:
+                lp = self.param_constraint(lp)
+            x, nc, a = fwd(lp, x, positions,
+                           jnp.asarray(thetas[i], jnp.float32),
+                           jnp.asarray(windows[i], jnp.int32),
+                           caches[i], None)
+            aux = aux + a
+            new_caches.append(nc if nc is not None else {})
+        return x, new_caches, aux
+
     def _run_layers(self, params: Params, x: jax.Array,
                     positions: jax.Array, caches, memory, *, causal: bool,
                     single_step: bool = False,
-                    window_override: Optional[int] = None, paged=None):
+                    window_override: Optional[int] = None):
         if self.uniform:
             return self._run_uniform(
                 params["layers"], x, positions, caches, memory,
                 causal=causal, single_step=single_step,
                 window_override=window_override,
-                decoder_cross=self.decoder_cross, kind=self.kinds[0],
-                paged=paged)
+                decoder_cross=self.decoder_cross, kind=self.kinds[0])
         if self.block_period:
             return self._run_blocks(
                 params["layers"], x, positions, caches, memory,
                 causal=causal, single_step=single_step,
-                window_override=window_override, paged=paged)
+                window_override=window_override)
         return self._run_pattern(
             params["layers"], x, positions, caches, memory,
             causal=causal, single_step=single_step,
-            window_override=window_override, paged=paged)
+            window_override=window_override)
 
     def _encode(self, params: Params, frames: jax.Array) -> jax.Array:
         """Whisper-style encoder over stub frame embeddings (B, F, d)."""
@@ -974,8 +1019,8 @@ class Model:
                 "kv_len": jnp.asarray(start, jnp.int32) + plen,
                 "q_offset": jnp.asarray(start, jnp.int32),
             }
-        x, new_layers, _ = self._run_layers(
-            params, x, positions, cache["layers"], None, causal=True,
+        x, new_layers, _ = self._run_paged_layers(
+            params, x, positions, cache["layers"], single_step=False,
             window_override=window_override, paged=paged)
         new_cache = dict(cache)
         new_cache["layers"] = new_layers
@@ -1036,9 +1081,9 @@ class Model:
         paged = {"page_size": page_size, "write_slots": write_slots,
                  "block_tables": bt, "kv_len": kv_len}
         positions = safe_pos[:, None]                     # (B, 1) for RoPE
-        x, new_layers, _ = self._run_layers(
-            params, x, positions, cache["layers"], None, causal=True,
-            single_step=True, window_override=window_override, paged=paged)
+        x, new_layers, _ = self._run_paged_layers(
+            params, x, positions, cache["layers"], single_step=True,
+            window_override=window_override, paged=paged)
         new_cache = dict(cache)
         new_cache["layers"] = new_layers
         return self._logits(params, x), new_cache

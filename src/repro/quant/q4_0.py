@@ -23,7 +23,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 BLOCK = 32

@@ -101,10 +101,17 @@ class ContinuousServingEngine:
         self.cache = model.init_cache(max_running, max_len,
                                       page_size=page_size, n_pages=n_pages)
 
-        # the cache argument is donated: the page pool is tens of MB and
-        # every step rebinds ``self.cache`` to the returned tree, so XLA
-        # may scatter K/V rows in place instead of copying the whole
-        # pool per call (measured: the copy dominated chunked prefill)
+        # the cache argument is donated AND its page pool is a list of
+        # per-layer buffers outside any scan carry (the scan-escape
+        # layout, see ``Model.init_cache``): every step rebinds
+        # ``self.cache`` to the returned tree, each layer's only cache
+        # write is a row scatter, so XLA aliases each donated buffer to
+        # its output and updates K/V in place — per-step cache traffic
+        # is O(touched bytes), not O(pool bytes).  (The previous stacked
+        # (L, ...) pool rode the layer scan's carry; the scan's xs->ys
+        # copy put an O(pool bytes) floor on every decode step and
+        # prefill chunk — measured to dominate chunked prefill at 641
+        # pages.)
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(
                 p, c, t, pos, page_size=page_size,
@@ -113,13 +120,14 @@ class ContinuousServingEngine:
         #: (padded chunk len, ctx page bucket) -> compiled prefill;
         #: ctx bucket 0 is the one-shot fresh-sequence path
         self._prefill_jits: Dict[Tuple[int, int], Any] = {}
-        # batched CoW page copier: one donated gather+scatter moves every
-        # queued page in-place (un-jitted .at[].set would copy the whole
-        # pool once per page); row counts bucket so compiles stay few
+        # batched CoW page copier over the per-layer buffer list: one
+        # donated gather+scatter moves every queued page in-place on
+        # every layer (un-jitted .at[].set would copy each buffer once
+        # per page); row counts bucket so compiles stay few
         self._copy_rows = jax.jit(
-            lambda k, v, src, dst: (k.at[:, dst].set(k[:, src]),
-                                    v.at[:, dst].set(v[:, src])),
-            donate_argnums=(0, 1))
+            lambda layers, src, dst: jax.tree.map(
+                lambda a: a.at[dst].set(a[src]), layers),
+            donate_argnums=0)
         #: wall-clock gaps between consecutive decode steps of the last
         #: generate() call (bench: max gap == worst admission stall)
         self.decode_gaps_s: List[float] = []
@@ -158,26 +166,18 @@ class ContinuousServingEngine:
 
     def _apply_copies(self) -> None:
         """Apply the pool's queued copy-on-write page copies to the
-        device cache (whole-page K/V row copies, all layers at once).
-        Must run after scheduling and before this step's forwards, so a
-        resumed prefill or decode reads the cloned rows, not scratch."""
+        device cache (whole-page K/V row copies on every per-layer
+        buffer, one compiled dispatch).  Must run after scheduling and
+        before this step's forwards, so a resumed prefill or decode
+        reads the cloned rows, not scratch."""
         copies = self.pool.drain_copies()
         if not copies:
             return
-        ps = self.page_size
-        bucket = _pad_bucket(len(copies), lo=1)
-        # pad with scratch-page self-copies (row 0 -> row 0 is a no-op
-        # write into the scratch page) so compile keys stay bucketed
-        src = np.zeros((bucket * ps,), np.int32)
-        dst = np.zeros((bucket * ps,), np.int32)
-        for i, (s, d) in enumerate(copies):
-            src[i * ps:(i + 1) * ps] = np.arange(s * ps, (s + 1) * ps)
-            dst[i * ps:(i + 1) * ps] = np.arange(d * ps, (d + 1) * ps)
-        kv = self.cache["layers"]["self"]
-        k, v = self._copy_rows(kv["k"], kv["v"], jnp.asarray(src),
-                               jnp.asarray(dst))
+        src, dst = self.pool.copy_row_plan(
+            copies, pad_to_pages=_pad_bucket(len(copies), lo=1))
         self.cache = dict(self.cache)
-        self.cache["layers"] = {"self": {"k": k, "v": v}}
+        self.cache["layers"] = self._copy_rows(
+            self.cache["layers"], jnp.asarray(src), jnp.asarray(dst))
 
     def _run_prefill_chunk(self, seq) -> jax.Array:
         """Run one prefill chunk for ``seq``; returns last-token logits

@@ -54,6 +54,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from ..core.memory import MemoryManager
 
 
@@ -384,6 +386,32 @@ class KVCachePool:
         """Hand the queued (src, dst) page copies to the engine."""
         out, self.pending_copies = self.pending_copies, []
         return out
+
+    def copy_row_plan(self, copies: Sequence[Tuple[int, int]], *,
+                      pad_to_pages: Optional[int] = None,
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Expand drained page copies into flat (src_rows, dst_rows)
+        index vectors for ONE per-layer pool buffer.
+
+        The device cache holds each layer's pool as an independent
+        ``(n_pages * page_size, H, D)`` buffer (the scan-escape layout),
+        so a page copy is the same row-index gather+scatter on every
+        layer's buffer — one plan serves all layers.  ``pad_to_pages``
+        pads the plan with scratch-page self-copies (row ``0 -> 0`` is a
+        no-op write into the reserved scratch page) so the engine's
+        compiled copier sees bucketed shapes and compiles a handful of
+        times, not once per copy count.
+        """
+        ps = self.cfg.page_size
+        n = pad_to_pages if pad_to_pages is not None else len(copies)
+        if n < len(copies):
+            raise ValueError(f"pad_to_pages={n} < {len(copies)} copies")
+        src = np.zeros((n * ps,), np.int32)
+        dst = np.zeros((n * ps,), np.int32)
+        for i, (s, d) in enumerate(copies):
+            src[i * ps:(i + 1) * ps] = np.arange(s * ps, (s + 1) * ps)
+            dst[i * ps:(i + 1) * ps] = np.arange(d * ps, (d + 1) * ps)
+        return src, dst
 
     # ------------------------------------------------------------------
     # accounting

@@ -1,13 +1,10 @@
 """Pytest config.
 
+Markers are registered in ``pyproject.toml`` (``slow`` gates the CI
+tier1 lane, which runs ``-m "not slow"``; the smoke lane runs the full
+suite).
+
 NOTE: no XLA_FLAGS device-count forcing here — in-process tests must
 see the single real CPU device.  Multi-device behaviour is covered by
 subprocess tests (tests/test_tp_distributed.py).
 """
-
-import pytest
-
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers", "slow: subprocess / multi-device tests (minutes)")

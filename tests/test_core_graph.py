@@ -8,7 +8,7 @@ import pytest
 from repro.core import (Engine, EngineConfig, ForwardGraph, GraphScheduler,
                         build_tp_mlp_graph, split_mlp_weights)
 from repro.core.graph import GraphError
-from repro.core.tensor import OpType, TensorBundle, make_header
+from repro.core.tensor import OpType, TensorBundle
 
 
 def _mlp_weights(d, f, seed=0):

@@ -1,7 +1,6 @@
 """Memory manager (paper §2.3): pools, double buffering — property tests."""
 
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.memory import MemoryManager, Pool, _align

@@ -7,8 +7,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core.numa import (KUNPENG_920_4NODE, QWEN3_4B,
                              async_gain_tokens_per_s, decode_throughput,
                              fig10_single_node, fig11_multi_node,
-                             fig12_13_long_prompt, headline_gain,
-                             prefill_throughput)
+                             fig12_13_long_prompt, headline_gain)
 from repro.core.threads import SyncSchedule, ThreadPool
 
 

@@ -8,7 +8,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
-from repro.kernels.ops import gqa_decode_attention, q4_matmul
+from repro.kernels.ops import gqa_decode_attention
 from repro.kernels.q4_gemm import q4_gemm
 from repro.quant.q4_0 import BLOCK, dequantize, quantize, quantized_bytes
 
@@ -99,6 +99,7 @@ class TestQ4Quant:
     @given(k_blocks=st.integers(1, 8), n=st.integers(1, 64),
            scale=st.floats(0.01, 100.0))
     @settings(max_examples=40, deadline=None)
+    @pytest.mark.slow
     def test_roundtrip_error_bound(self, k_blocks, n, scale):
         """|dequant(quant(w)) - w| <= |block scale| (+ fp16 rounding)."""
         K = k_blocks * BLOCK
@@ -111,6 +112,7 @@ class TestQ4Quant:
 
     @given(k_blocks=st.integers(1, 4), n=st.integers(1, 32))
     @settings(max_examples=20, deadline=None)
+    @pytest.mark.slow
     def test_idempotent(self, k_blocks, n):
         """Quantizing an already-quantized weight is exact."""
         K = k_blocks * BLOCK

@@ -7,8 +7,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.models.moe import init_moe, moe, moe_dense, moe_scatter
-from repro.models.recurrent import (RGLRUState, init_rglru_block,
-                                    rglru_block, rglru_scan, rglru_step)
+from repro.models.recurrent import (init_rglru_block, rglru_block, rglru_scan,
+                                    rglru_step)
 from repro.models.ssm import (ssd_chunked, ssd_decode_step, ssd_reference)
 
 
@@ -65,6 +65,7 @@ class TestSSD:
     @given(t=st.integers(3, 40), chunk=st.sampled_from([2, 4, 8, 16]),
            g=st.sampled_from([1, 2]))
     @settings(max_examples=20, deadline=None)
+    @pytest.mark.slow
     def test_chunked_equals_recurrent(self, t, chunk, g):
         x, dt, A, Bm, Cm = self._inputs(1, t, 2 * g, 4, g, 8, seed=t)
         y, st_ = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
@@ -134,6 +135,7 @@ class TestRGLRU:
 
     @given(t=st.integers(2, 24))
     @settings(max_examples=15, deadline=None)
+    @pytest.mark.slow
     def test_state_is_contraction(self, t):
         """|a_t| < 1 => recurrence is stable (no state blow-up)."""
         p = init_rglru_block(jax.random.PRNGKey(4), 8, 12, 4, jnp.float32)

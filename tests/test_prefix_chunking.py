@@ -271,6 +271,7 @@ class TestEnginePrefixChunking:
         comps = eng.generate(reqs, arrivals=arrivals)
         return eng, [c.tokens for c in comps]
 
+    @pytest.mark.slow
     def test_shared_prefix_parity_and_page_savings(self, tiny):
         _, model, params = tiny
         suffixes = [[31, 32, 33], [41, 42, 43], [51, 52]]
@@ -287,6 +288,7 @@ class TestEnginePrefixChunking:
                 < e_off.pool.stats["fresh_pages"])
         assert e_on.pool.stats["cached_tokens"] >= 8
 
+    @pytest.mark.slow
     def test_cow_divergence_parity(self, tiny):
         """Second request diverges mid-page: first page shares, second
         page clones (copy-on-write) and only the suffix recomputes."""
@@ -304,6 +306,7 @@ class TestEnginePrefixChunking:
         assert e_on.pool.stats["cow_copies"] >= 1
         assert e_on.pool.stats["shared_pages"] >= 1
 
+    @pytest.mark.slow
     def test_chunked_prefill_parity(self, tiny):
         """Chunked prefill (including a 17-token prompt spread over many
         steps) produces the same greedy tokens as one-shot prefill."""
@@ -317,6 +320,7 @@ class TestEnginePrefixChunking:
                                   prefill_chunk=4)
         assert toks_chunk == toks_one
 
+    @pytest.mark.slow
     def test_chunked_plus_prefix_parity(self, tiny):
         _, model, params = tiny
         suffixes = [[31, 32, 33, 34, 35], [41, 42, 43, 44]]
@@ -345,3 +349,137 @@ class TestEnginePrefixChunking:
         assert e.pool.n_live() == 0
         assert e.pool.n_free() == e.pool.cfg.n_pages - 1
         assert e.pool.pending_copies == []
+
+
+class TestPerLayerCopies:
+    """CoW page copies against the per-layer (scan-escape) cache
+    layout: one (src_rows, dst_rows) plan serves every layer buffer."""
+
+    def test_copy_row_plan_expands_pages_to_rows(self):
+        pool = _pool(n_pages=9, page_size=4)
+        src, dst = pool.copy_row_plan([(2, 5)])
+        assert src.tolist() == [8, 9, 10, 11]
+        assert dst.tolist() == [20, 21, 22, 23]
+
+    def test_copy_row_plan_pads_with_scratch_noops(self):
+        pool = _pool(n_pages=9, page_size=4)
+        src, dst = pool.copy_row_plan([(2, 5)], pad_to_pages=4)
+        assert src.shape == dst.shape == (16,)
+        # pad rows are 0 -> 0: a self-copy into the reserved scratch
+        # page, invisible to every live sequence
+        assert src[4:].tolist() == [0] * 12
+        assert dst[4:].tolist() == [0] * 12
+        with pytest.raises(ValueError):
+            pool.copy_row_plan([(2, 5), (3, 6)], pad_to_pages=1)
+
+    def test_apply_copies_touches_every_layer_buffer(self, tiny):
+        """A queued CoW copy must land in ALL per-layer K and V buffers
+        in one dispatch, and leave the engine cache rebound to the
+        copied (donated) buffers."""
+        _, model, params = tiny
+        eng = ContinuousServingEngine(model, params, max_len=32,
+                                      max_running=2, page_size=4)
+        ps = 4
+        src_page, dst_page = 2, 5
+        rows = np.arange(src_page * ps, (src_page + 1) * ps)
+        for i, lyr in enumerate(eng.cache["layers"]):
+            H, D = lyr["self"]["k"].shape[1:]
+            vals = np.full((ps, H, D), float(i + 1), np.float32)
+            lyr["self"]["k"] = lyr["self"]["k"].at[rows].set(vals)
+            lyr["self"]["v"] = lyr["self"]["v"].at[rows].set(-vals)
+        eng.pool.pending_copies.append((src_page, dst_page))
+        eng._apply_copies()
+        assert eng.pool.pending_copies == []
+        drows = np.arange(dst_page * ps, (dst_page + 1) * ps)
+        for i, lyr in enumerate(eng.cache["layers"]):
+            np.testing.assert_array_equal(
+                np.asarray(lyr["self"]["k"][drows]),
+                np.full_like(np.asarray(lyr["self"]["k"][drows]),
+                             float(i + 1)))
+            np.testing.assert_array_equal(
+                np.asarray(lyr["self"]["v"][drows]),
+                np.full_like(np.asarray(lyr["self"]["v"][drows]),
+                             -float(i + 1)))
+
+
+class TestBenchGate:
+    """tools/bench_gate.py regression logic (pure compare path)."""
+
+    def _report(self, **vals):
+        metrics = {}
+        for name, (value, direction) in vals.items():
+            metrics[name] = {"value": value, "direction": direction}
+        return {"metrics": metrics}
+
+    def test_injected_regression_fails_gate(self, tmp_path):
+        import json
+        import subprocess
+        import sys
+        import os
+        root = os.path.join(os.path.dirname(__file__), "..")
+        base = self._report(decode_tok_per_s=(100.0, "higher"),
+                            decode_flatness=(1.0, "lower"))
+        # decode throughput fell 40% — far past the 20% threshold
+        cur = self._report(decode_tok_per_s=(60.0, "higher"),
+                           decode_flatness=(1.0, "lower"))
+        bp, cp = tmp_path / "base.json", tmp_path / "cur.json"
+        bp.write_text(json.dumps(base))
+        cp.write_text(json.dumps(cur))
+        r = subprocess.run(
+            [sys.executable, os.path.join(root, "tools", "bench_gate.py"),
+             "compare", str(cp), str(bp)],
+            capture_output=True, text=True)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "REGRESSION" in r.stderr
+
+    def test_within_threshold_passes(self):
+        import sys
+        import os
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "tools"))
+        import bench_gate
+        base = self._report(decode_tok_per_s=(100.0, "higher"),
+                            max_decode_gap_ms=(10.0, "lower"))
+        cur = self._report(decode_tok_per_s=(85.0, "higher"),
+                           max_decode_gap_ms=(11.5, "lower"))
+        assert bench_gate.compare(cur, base, threshold=0.20) == []
+        # lower-is-better direction regresses upward
+        worse = self._report(decode_tok_per_s=(100.0, "higher"),
+                             max_decode_gap_ms=(13.0, "lower"))
+        regs = bench_gate.compare(worse, base, threshold=0.20)
+        assert len(regs) == 1 and "max_decode_gap_ms" in regs[0]
+
+    def test_missing_metrics_are_skipped(self):
+        import sys
+        import os
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "tools"))
+        import bench_gate
+        base = self._report(old_metric=(5.0, "lower"))
+        cur = self._report(new_metric=(1.0, "lower"))
+        assert bench_gate.compare(cur, base, threshold=0.2) == []
+
+    def test_run_baseline_is_the_outfile_itself(self, tmp_path):
+        """The committed BENCH_PR3.json must be read as the baseline
+        BEFORE a run overwrites it — otherwise the wired gate can
+        never fire (it would exclude its own output and find nothing
+        to compare against)."""
+        import json
+        import sys
+        import os
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "tools"))
+        import bench_gate
+        out = tmp_path / "BENCH_PR3.json"
+        committed = self._report(decode_tok_per_s=(100.0, "higher"))
+        out.write_text(json.dumps(committed))
+        base, name = bench_gate.load_baseline(str(tmp_path), str(out))
+        assert base == committed and "previous" in name
+        # without the out-file, fall back to the newest other BENCH_*
+        out.unlink()
+        other = tmp_path / "BENCH_OLD.json"
+        other.write_text(json.dumps(committed))
+        base, name = bench_gate.load_baseline(str(tmp_path), str(out))
+        assert base == committed and name == "BENCH_OLD.json"
+        other.unlink()
+        assert bench_gate.load_baseline(str(tmp_path), str(out))[0] is None

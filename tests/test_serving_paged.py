@@ -178,6 +178,7 @@ MIXED_PROMPTS = [[1, 2, 3, 4, 5], [7, 8, 9], [10, 11, 12, 13, 14, 15, 16],
 
 
 class TestContinuousEngine:
+    @pytest.mark.slow
     def test_greedy_token_parity_with_bucket_engine(self, tiny):
         _, model, params = tiny
         reqs = [Request(uid=i, prompt=p,
@@ -190,6 +191,7 @@ class TestContinuousEngine:
             page_size=4).generate(reqs)
         assert [c.tokens for c in bc] == [c.tokens for c in cc]
 
+    @pytest.mark.slow
     def test_preemption_preserves_greedy_tokens(self, tiny):
         """Starved pool: preempted sequences recompute and still match."""
         _, model, params = tiny
@@ -255,6 +257,7 @@ class TestPagedKernel:
     @given(b=st.integers(1, 3), mp=st.integers(1, 4),
            g=st.sampled_from([1, 2]))
     @settings(max_examples=8, deadline=None)
+    @pytest.mark.slow
     def test_pallas_kernel_matches_ref(self, b, mp, g):
         from repro.kernels.decode_attention import paged_decode_attention
         from repro.kernels.ref import paged_decode_attention_ref
@@ -273,3 +276,112 @@ class TestPagedKernel:
                                          interpret=True)
             np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
                                        rtol=1e-5, atol=1e-5)
+
+
+class TestScanEscapeLayout:
+    """Per-layer paged-pool buffers outside the layer-scan carry.
+
+    The compiled decode/prefill step must (a) hold each layer's K/V
+    pool as an independent buffer XLA can donate, (b) update those
+    buffers in place (output aliases input — no O(pool bytes) copy per
+    step), and (c) produce results that do not depend on how large the
+    pool is, only on the pages the block table maps.
+    """
+
+    def _paged_cache(self, model, n_pages, *, B=2, max_len=32, ps=4,
+                     ctx=8, seed_rows=False):
+        cache = model.init_cache(B, max_len, page_size=ps,
+                                 n_pages=n_pages)
+        pps = ctx // ps + 1                  # resident ctx + decode page
+        bt = np.zeros((B, max_len // ps), np.int32)
+        for b in range(B):
+            bt[b, :pps] = 1 + b * pps + np.arange(pps)
+        cache["block_tables"] = jnp.asarray(bt)
+        if seed_rows:
+            # deterministic resident K/V in the mapped rows only: the
+            # same physical rows exist in every pool size, so results
+            # must match exactly across the sweep
+            rows = np.concatenate([
+                bt[b, :ctx // ps].repeat(ps) * ps
+                + np.tile(np.arange(ps), ctx // ps)
+                for b in range(B)])
+            for i, lyr in enumerate(cache["layers"]):
+                H, D = lyr["self"]["k"].shape[1:]
+                vals = (np.arange(len(rows) * H * D, dtype=np.float32)
+                        .reshape(len(rows), H, D) % 7 - 3) * 0.1 * (i + 1)
+                lyr["self"]["k"] = lyr["self"]["k"].at[rows].set(vals)
+                lyr["self"]["v"] = lyr["self"]["v"].at[rows].set(-vals)
+        return cache
+
+    def test_cache_layers_are_independent_buffers(self, tiny):
+        cfg, model, _ = tiny
+        cache = model.init_cache(2, 32, page_size=4, n_pages=9)
+        layers = cache["layers"]
+        assert isinstance(layers, list) and len(layers) == cfg.n_layers
+        shape = (9 * 4, cfg.n_kv_heads, 64 // 4)
+        for lyr in layers:
+            assert lyr["self"]["k"].shape == shape
+            assert lyr["self"]["v"].shape == shape
+
+    def test_decode_step_aliases_donated_buffers_in_place(self, tiny):
+        """With donation, every layer buffer's output must reuse the
+        input's device memory — the step costs O(touched bytes)."""
+        _, model, params = tiny
+        ps, B = 4, 2
+        decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                                   page_size=ps),
+            donate_argnums=1)
+        cache = self._paged_cache(model, n_pages=11, ps=ps, B=B)
+        toks = jnp.ones((B, 1), jnp.int32)
+        pos = jnp.full((B,), 8, jnp.int32)
+        _, cache = decode(params, cache, toks, pos)      # compile+warm
+        ptr_in = [lyr["self"][kv].unsafe_buffer_pointer()
+                  for lyr in cache["layers"] for kv in ("k", "v")]
+        _, cache = decode(params, cache, toks, pos)
+        ptr_out = [lyr["self"][kv].unsafe_buffer_pointer()
+                   for lyr in cache["layers"] for kv in ("k", "v")]
+        assert ptr_in == ptr_out
+
+    def test_decode_pool_size_invariance(self, tiny):
+        """8x pool sweep at identical touched pages: logits and the
+        touched cache rows must be bit-identical."""
+        _, model, params = tiny
+        ps, B, ctx = 4, 2, 8
+        decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                                   page_size=ps))
+        toks = jnp.asarray([[3], [7]], jnp.int32)
+        pos = jnp.full((B,), ctx, jnp.int32)
+        results = {}
+        for P in (11, 88):
+            cache = self._paged_cache(model, P, ps=ps, B=B, ctx=ctx,
+                                      seed_rows=True)
+            logits, nc = decode(params, cache, toks, pos)
+            touched = [np.asarray(lyr["self"][kv][:11 * ps])
+                       for lyr in nc["layers"] for kv in ("k", "v")]
+            results[P] = (np.asarray(logits), touched)
+        np.testing.assert_array_equal(results[11][0], results[88][0])
+        for a, b in zip(results[11][1], results[88][1]):
+            np.testing.assert_array_equal(a, b)
+
+    def test_prefill_chunk_pool_size_invariance(self, tiny):
+        """Resumed prefill chunk over the same resident context must
+        also be pool-size independent."""
+        _, model, params = tiny
+        ps, B, ctx = 4, 2, 8
+        prefill = jax.jit(
+            lambda p, b, c, slot, plen, start: model.prefill_paged(
+                p, b, c, slot, plen, start=start, ctx_pages=4,
+                page_size=ps))
+        chunk = {"tokens": jnp.asarray([[5, 6, 7, 8]], jnp.int32)}
+        out = {}
+        for P in (11, 88):
+            cache = self._paged_cache(model, P, ps=ps, B=B, ctx=ctx,
+                                      seed_rows=True)
+            logits, _ = prefill(params, chunk, cache,
+                                jnp.asarray(1, jnp.int32),
+                                jnp.asarray(4, jnp.int32),
+                                jnp.asarray(ctx, jnp.int32))
+            out[P] = np.asarray(logits)
+        np.testing.assert_array_equal(out[11], out[88])

@@ -8,7 +8,6 @@ Plus the HLO cost parser + roofline plumbing on a real compiled module.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.data.pipeline import PackedLMDataset

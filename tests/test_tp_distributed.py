@@ -12,6 +12,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns a child interpreter with 8 forced host
+# devices — minutes of wall time, so the whole module is slow-lane
+pytestmark = pytest.mark.slow
+
 
 def _run(snippet: str) -> str:
     env = dict(os.environ)
@@ -68,8 +72,9 @@ def test_sharded_params_placement():
                   "norm": np.zeros((16,), np.float32)}
         sharded = tp.shard_params(params, mesh)
         # §3.2: w_up row-partitioned (axis 1), w_down col (axis 0)
-        assert sharded["w_up"].sharding.spec == jax.sharding.PartitionSpec(None, "model")
-        assert sharded["w_down"].sharding.spec == jax.sharding.PartitionSpec("model", None)
+        P = jax.sharding.PartitionSpec
+        assert sharded["w_up"].sharding.spec == P(None, "model")
+        assert sharded["w_down"].sharding.spec == P("model", None)
         assert sharded["norm"].sharding.spec == jax.sharding.PartitionSpec()
         # node-local bytes: each device holds 1/8 of each matrix
         shard_bytes = sharded["w_up"].addressable_shards[0].data.nbytes

@@ -1,6 +1,5 @@
 """Training loop, optimizer, checkpointing, data pipeline, serving."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -14,9 +13,9 @@ from repro.models import ModelConfig, build_model
 from repro.serving.engine import Request, ServingEngine, throughput_report
 from repro.serving.sampler import SamplingParams, sample
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
-from repro.training.loop import make_train_step, train
+from repro.training.loop import train
 from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
-                                      cosine_lr, global_norm)
+                                      cosine_lr)
 
 
 @pytest.fixture(scope="module")

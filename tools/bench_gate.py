@@ -1,0 +1,187 @@
+"""Bench-regression gate (``tools/check.sh --bench``).
+
+Runs the key ``benchmarks/serving_bench.py`` sections, writes
+``BENCH_PR3.json`` at the repo root, and compares the tracked metrics
+against a baseline read *before* the write: the committed/previous
+``BENCH_PR3.json`` itself when present, else the newest other
+``BENCH_*.json``.  Any metric that regresses more than the threshold
+(default 20%, knob: ``BENCH_REGRESSION_PCT`` env var or
+``--threshold``) fails the gate with a nonzero exit.
+
+Tracked metrics (direction-aware):
+
+  decode_tok_per_s        serving_cb continuous decode throughput (^)
+  max_decode_gap_ms       serving_chunk chunked32 worst decode stall (v)
+  decode_step_ms_p512     scan-escape compiled decode step, 512-page
+                          pool (v) — the per-step O(touched bytes)
+                          claim in absolute terms
+  decode_flatness         scan-escape t(p512)/t(p64) (v) — per-step
+                          cost must stay flat as the pool grows 8x
+
+Usage:
+  python tools/bench_gate.py run [--out BENCH_PR3.json] [--threshold 20]
+  python tools/bench_gate.py compare CURRENT.json BASELINE.json \
+      [--threshold 20]
+
+``compare`` is pure (no benches run) so tests can exercise the
+regression logic against injected baselines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+# metric -> (bench row name, direction); "higher" = bigger is better
+METRICS: Dict[str, Tuple[str, str]] = {
+    "decode_tok_per_s": ("serving_cb.continuous.decode_toks_per_s",
+                         "higher"),
+    "max_decode_gap_ms": ("serving_chunk.max_decode_gap_ms.chunked32",
+                          "lower"),
+    "decode_step_ms_p512": ("serving_scan_escape.decode_step_ms.p512",
+                            "lower"),
+    "decode_flatness": ("serving_scan_escape.decode_flatness", "lower"),
+}
+
+
+def _parse_derived(s: str) -> float:
+    return float(s.rstrip("x"))
+
+
+def collect() -> Dict[str, object]:
+    """Run the gate's bench sections and assemble the report dict."""
+    from benchmarks import serving_bench
+
+    rows: List[Tuple[str, float, str]] = []
+    rows += serving_bench.serving_cb_rows()
+    rows += serving_bench.serving_chunk_rows()
+    rows += serving_bench.serving_scan_escape_rows()
+    by_name = {name: derived for name, _us, derived in rows}
+
+    metrics = {}
+    for metric, (row, direction) in METRICS.items():
+        if row not in by_name:
+            raise RuntimeError(f"bench row {row!r} missing for {metric}")
+        metrics[metric] = {"value": _parse_derived(by_name[row]),
+                           "direction": direction}
+    return {
+        "meta": {"unix_time": time.time(),
+                 "source": "tools/bench_gate.py"},
+        "metrics": metrics,
+        "rows": {name: derived for name, _us, derived in rows},
+    }
+
+
+def compare(current: Dict[str, object], baseline: Dict[str, object],
+            threshold: float) -> List[str]:
+    """Return regression messages (empty = gate passes).
+
+    A metric regresses when it moves in its bad direction by more than
+    ``threshold`` (fraction, e.g. 0.2) relative to the baseline.
+    Metrics present in only one file are skipped (schema drift must not
+    fail the gate).
+    """
+    out: List[str] = []
+    cur_m = current.get("metrics", {})
+    base_m = baseline.get("metrics", {})
+    for name, cur in cur_m.items():
+        base = base_m.get(name)
+        if base is None:
+            continue
+        cv, bv = float(cur["value"]), float(base["value"])
+        direction = cur.get("direction", base.get("direction", "higher"))
+        if bv == 0:
+            continue
+        if direction == "higher":
+            bad = cv < bv * (1.0 - threshold)
+            move = (bv - cv) / bv
+        else:
+            bad = cv > bv * (1.0 + threshold)
+            move = (cv - bv) / bv
+        if bad:
+            out.append(
+                f"{name}: {cv:g} vs baseline {bv:g} "
+                f"({move * 100:.0f}% worse, direction={direction}, "
+                f"threshold={threshold * 100:.0f}%)")
+    return out
+
+
+def load_baseline(root: str, out_path: str,
+                  ) -> Tuple[Optional[Dict[str, object]], str]:
+    """Pick the baseline for a ``run``: the committed/previous report
+    at ``out_path`` itself (read BEFORE the run overwrites it), else
+    the newest other ``BENCH_*.json`` in the repo root."""
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f), os.path.basename(out_path) + " (previous)"
+    cands = [p for p in glob.glob(os.path.join(root, "BENCH_*.json"))
+             if os.path.abspath(p) != os.path.abspath(out_path)]
+    if not cands:
+        return None, ""
+    best = max(cands, key=os.path.getmtime)
+    with open(best) as f:
+        return json.load(f), os.path.basename(best)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    run_p = sub.add_parser("run", help="run benches, write + compare")
+    run_p.add_argument("--out", default="BENCH_PR3.json")
+    run_p.add_argument("--threshold", type=float, default=None,
+                       help="regression threshold in percent")
+    cmp_p = sub.add_parser("compare", help="compare two reports")
+    cmp_p.add_argument("current")
+    cmp_p.add_argument("baseline")
+    cmp_p.add_argument("--threshold", type=float, default=None)
+    args = ap.parse_args(argv)
+
+    pct = args.threshold
+    if pct is None:
+        pct = float(os.environ.get("BENCH_REGRESSION_PCT", "20"))
+    threshold = pct / 100.0
+
+    if args.cmd == "compare":
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        regs = compare(current, baseline, threshold)
+        for r in regs:
+            print(f"bench-gate REGRESSION: {r}", file=sys.stderr)
+        print("bench-gate: " + ("FAILED" if regs else "OK"))
+        return 1 if regs else 0
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, root)
+    out_path = os.path.join(root, args.out) \
+        if not os.path.isabs(args.out) else args.out
+    # read the baseline FIRST: the committed out-file is itself the
+    # baseline of record, and the run below overwrites it
+    baseline, base_name = load_baseline(root, out_path)
+    report = collect()
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench-gate: wrote {out_path}")
+    for m, v in report["metrics"].items():
+        print(f"  {m} = {v['value']:g} ({v['direction']} is better)")
+    if baseline is None:
+        print("bench-gate: no baseline BENCH_*.json found — "
+              "nothing to compare, gate passes")
+        return 0
+    regs = compare(report, baseline, threshold)
+    print(f"bench-gate: baseline {base_name}, threshold {pct:.0f}%")
+    for r in regs:
+        print(f"bench-gate REGRESSION: {r}", file=sys.stderr)
+    print("bench-gate: " + ("FAILED" if regs else "OK"))
+    return 1 if regs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

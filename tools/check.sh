@@ -2,14 +2,36 @@
 # PR gate: tier-1 tests + a short continuous-serving smoke so the
 # paged-KV scheduler path is exercised on every change, plus a doc-link
 # check so README.md / docs/*.md never reference a module path or CLI
-# flag that no longer exists.
+# flag that no longer exists.  CI (.github/workflows/ci.yml) runs the
+# same entry points, one job per lane.
 #
-#   tools/check.sh            # full tier-1 + serving smoke + doc check
+#   tools/check.sh            # lint + docs + tier-1 + serving smoke
 #   tools/check.sh --smoke    # serving smoke only (~30 s)
 #   tools/check.sh --docs     # doc-link check only (<1 s)
+#   tools/check.sh --lint     # ruff check + format check (skips with a
+#                             # warning when ruff is not installed)
+#   tools/check.sh --bench    # bench-regression gate: runs the key
+#                             # serving_bench sections, writes
+#                             # BENCH_PR3.json, fails on a >20%
+#                             # regression vs the newest BENCH_*.json
+#                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+lint_check() {
+    echo "== lint: ruff =="
+    if ! command -v ruff >/dev/null 2>&1; then
+        echo "lint: ruff not installed — skipping (CI's lint job runs it)"
+        return 0
+    fi
+    ruff check src benchmarks tools tests examples
+    # formatting is advisory: the codebase is hand-formatted (aligned
+    # jax shapes); `ruff check` (E/W/F in pyproject.toml) is the gate
+    ruff format --check src benchmarks tools tests examples \
+        || echo "lint: ruff format differences (advisory, not a gate)"
+    echo "lint: OK"
+}
 
 doc_check() {
     echo "== doc check: module paths and CLI flags =="
@@ -59,7 +81,19 @@ if [[ "${1:-}" == "--docs" ]]; then
     exit 0
 fi
 
+if [[ "${1:-}" == "--lint" ]]; then
+    lint_check
+    exit 0
+fi
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== bench-regression gate (serving_bench key sections) =="
+    python tools/bench_gate.py run
+    exit 0
+fi
+
 if [[ "${1:-}" != "--smoke" ]]; then
+    lint_check
     doc_check
     echo "== tier-1: pytest =="
     python -m pytest -x -q

@@ -1,7 +1,6 @@
 """Render EXPERIMENTS.md tables from the dry-run sweep JSONs."""
 
 import json
-import sys
 
 
 def table(path, title):
