@@ -25,6 +25,24 @@ follow-ons (see ``docs/serving.md``):
                      one-shot vs chunked prefill: max wall gap between
                      consecutive decode steps (chunking bounds it)
 
+The async section measures the layered stack's live front-end
+(``AsyncEngine``: background stepper thread, lock-guarded inbox)
+against the batch-mode driver on the SAME Poisson workload:
+
+  serving_async.ttft_p50_ms / ttft_p99_ms
+                     time-to-first-token under open-loop wall-clock
+                     submission (client stamps submit, engine stamps
+                     the first sampled token)
+  serving_async.itl_mean_ms.p50
+                     per-request mean inter-token latency, median
+                     across requests
+  serving_async.batch.ttft_p50_ms / ttft_p99_ms
+                     the same arrivals through the synchronous
+                     ``generate(arrivals=)`` driver — the async layer
+                     must not tax TTFT
+  serving_async.greedy_parity
+                     async and batch tokens must be identical
+
 The scan-escape section is the evidence for the per-layer paged-cache
 layout (``Model.init_cache`` docstring, docs/serving.md "Cache memory
 layout"): per-step cost must be **flat in pool size** at fixed touched
@@ -225,6 +243,79 @@ def serving_chunk_rows() -> List[Row]:
     ]
 
 
+def _pct(sorted_vals: List[float], q: float) -> float:
+    i = min(int(q * len(sorted_vals)), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+def serving_async_rows() -> List[Row]:
+    """Open-loop Poisson submission into the live ``AsyncEngine`` vs
+    the same workload through the batch-mode driver.  TTFT is what a
+    client sees: submit stamped by the caller, first token stamped by
+    the engine core (``Completion.t_first``).  Inter-token latency is
+    each request's (t1 - t_first) / (n_tokens - 1)."""
+    from repro.models import ModelConfig, build_model
+    from repro.serving import (AsyncEngine, ContinuousServingEngine,
+                               Request, SamplingParams)
+
+    cfg = ModelConfig(name="bench-tiny", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(23)
+    reqs = [Request(uid=i,
+                    prompt=list(rng.integers(1, 258, 4 + 4 * (i % 3))),
+                    sampling=SamplingParams(max_new_tokens=12))
+            for i in range(16)]
+    arrivals = np.cumsum(rng.exponential(0.06, size=len(reqs))).tolist()
+    max_len = max(len(r.prompt) for r in reqs) + 12 + 8
+
+    # --- batch-mode anchor: the same arrivals, synchronous driver ---
+    beng = ContinuousServingEngine(model, params, max_len=max_len,
+                                   max_running=8, page_size=8,
+                                   prefix_cache=False)
+    beng.generate(reqs[:3])                     # warm compile caches
+    bcomps = beng.generate(reqs, arrivals=arrivals)
+    batch_ttft = sorted(c.t_first - c.t0 for c in bcomps)
+
+    # --- live open-loop submission into the async engine ---
+    eng = AsyncEngine(model, params, max_len=max_len, max_running=8,
+                      page_size=8, prefix_cache=False)
+    warm = [eng.submit(r) for r in reqs[:3]]    # warm the live path
+    for h in warm:
+        eng.result(h, timeout=300)
+    t0 = time.perf_counter()
+    handles, t_submit = [], []
+    for r, a in zip(reqs, arrivals):
+        gap = t0 + a - time.perf_counter()
+        if gap > 0:
+            time.sleep(gap)
+        t_submit.append(time.perf_counter())
+        handles.append(eng.submit(r))
+    acomps = [eng.result(h, timeout=600) for h in handles]
+    eng.shutdown()
+
+    ttft = sorted(c.t_first - ts for c, ts in zip(acomps, t_submit))
+    itl = sorted((c.t1 - c.t_first) / max(len(c.tokens) - 1, 1)
+                 for c in acomps)
+    parity = ("OK" if [c.tokens for c in acomps]
+              == [c.tokens for c in bcomps] else "MISMATCH")
+    return [
+        ("serving_async.ttft_p50_ms", _pct(ttft, 0.5) * 1e6,
+         f"{_pct(ttft, 0.5) * 1e3:.1f}"),
+        ("serving_async.ttft_p99_ms", _pct(ttft, 0.99) * 1e6,
+         f"{_pct(ttft, 0.99) * 1e3:.1f}"),
+        ("serving_async.itl_mean_ms.p50", _pct(itl, 0.5) * 1e6,
+         f"{_pct(itl, 0.5) * 1e3:.2f}"),
+        ("serving_async.batch.ttft_p50_ms", _pct(batch_ttft, 0.5) * 1e6,
+         f"{_pct(batch_ttft, 0.5) * 1e3:.1f}"),
+        ("serving_async.batch.ttft_p99_ms", _pct(batch_ttft, 0.99) * 1e6,
+         f"{_pct(batch_ttft, 0.99) * 1e3:.1f}"),
+        ("serving_async.greedy_parity", 0.0, parity),
+    ]
+
+
 def _best_of(fn, *, repeats: int = 3, steps: int = 16) -> float:
     """Best-of-``repeats`` mean seconds per call of ``fn(steps)``."""
     best = float("inf")
@@ -417,7 +508,8 @@ def serving_scan_escape_rows() -> List[Row]:
 
 def all_rows() -> List[Row]:
     return (serving_cb_rows() + serving_prefix_rows() +
-            serving_chunk_rows() + serving_scan_escape_rows())
+            serving_chunk_rows() + serving_async_rows() +
+            serving_scan_escape_rows())
 
 
 if __name__ == "__main__":

@@ -8,12 +8,17 @@ prints the throughput report (the paper's §4 measurement protocol).
 ``--engine bucket`` (default) is the sequential length-bucket baseline;
 ``--engine continuous`` runs the paged-KV continuous-batching engine
 (uniform self-attention archs only — the paged cache has no recurrent/
-cross-attention state yet).
+cross-attention state yet); ``--engine async`` serves the same stack
+through the live ``AsyncEngine`` (submit/stream on a background
+stepper thread) — add ``--interactive`` for a stdin demo that streams
+each prompt's tokens as they are sampled.
 
 Examples:
     python -m repro.launch.serve --arch gemma3-1b --max-new 24
     python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \\
         --max-running 4 --page-size 16
+    python -m repro.launch.serve --arch qwen3-1.7b --engine async \\
+        --interactive --warmup-steps 80
     python -m repro.launch.serve --arch recurrentgemma-2b \\
         --prompt "the scheduler binds" --temperature 0.7
 """
@@ -33,8 +38,11 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--engine", choices=("bucket", "continuous"),
+    ap.add_argument("--engine", choices=("bucket", "continuous", "async"),
                     default="bucket")
+    ap.add_argument("--interactive", action="store_true",
+                    help="async engine: read prompts from stdin and "
+                         "stream tokens as they are sampled")
     ap.add_argument("--max-running", type=int, default=4,
                     help="continuous engine: running-batch slots")
     ap.add_argument("--page-size", type=int, default=16,
@@ -53,6 +61,8 @@ def main() -> int:
                          "(0 = random weights)")
     args = ap.parse_args()
 
+    import time
+
     import jax
     import jax.numpy as jnp
 
@@ -61,8 +71,8 @@ def main() -> int:
                                  stub_image_embeds)
     from ..data.tokenizer import ByteTokenizer
     from ..models import build_model, reduced_config
-    from ..serving import (ContinuousServingEngine, Request, ServingEngine,
-                           throughput_report)
+    from ..serving import (AsyncEngine, ContinuousServingEngine, Request,
+                           ServingEngine, throughput_report)
     from ..serving.sampler import SamplingParams
     from ..training.loop import train
     from ..training.optimizer import AdamWConfig
@@ -113,7 +123,47 @@ def main() -> int:
         reqs.append(Request(uid=i, prompt=tok.encode(p), sampling=sp,
                             extra=extra))
     max_len = max(len(r.prompt) for r in reqs) + args.max_new + 8
-    if args.engine == "continuous":
+    if args.engine == "async":
+        eng = AsyncEngine(
+            model, params, max_len=max(max_len, 256 + args.max_new)
+            if args.interactive else max_len,
+            max_running=args.max_running, page_size=args.page_size,
+            n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
+            prefix_cache=not args.no_prefix_cache)
+        if args.interactive:
+            print("interactive async demo — one prompt per line, "
+                  "empty line or EOF quits")
+            while True:
+                try:
+                    line = input("> ")
+                except EOFError:
+                    break
+                if not line.strip():
+                    break
+                handle = eng.submit(Request(uid=0,
+                                            prompt=tok.encode(line),
+                                            sampling=sp))
+                for t in eng.stream(handle, timeout=300):
+                    print(tok.decode([t]), end="", flush=True)
+                print()
+            eng.shutdown()
+            return 0
+        t_submit = []
+        handles = []
+        for r in reqs:          # live submission: all clients at once
+            t_submit.append(time.perf_counter())
+            handles.append(eng.submit(r))
+        comps = [eng.result(h, timeout=600) for h in handles]
+        st = eng.core.pool.stats
+        print(f"kv pool: {st['fresh_pages']} pages allocated, "
+              f"{st['shared_pages']} shared, {st['cow_copies']} CoW, "
+              f"{st['cached_tokens']} prompt tokens from cache, "
+              f"{st['retention_hits']} retention hits")
+        ttft = sorted(c.t_first - ts for c, ts in zip(comps, t_submit))
+        print(f"ttft: p50 {ttft[len(ttft) // 2] * 1e3:.1f} ms, "
+              f"max {ttft[-1] * 1e3:.1f} ms")
+        eng.shutdown()
+    elif args.engine == "continuous":
         eng = ContinuousServingEngine(
             model, params, max_len=max_len, max_running=args.max_running,
             page_size=args.page_size, n_pages=args.n_pages,
@@ -129,7 +179,10 @@ def main() -> int:
         comps = eng.generate(reqs, max_batch=args.max_batch)
     for c, p in zip(comps, prompts):
         print(f"[{c.uid}] {p!r} -> {tok.decode(c.tokens)!r}")
-    rep = throughput_report(comps, **eng.last_phase_s)
+    # async completions carry t0/t1 stamps; sync engines report their
+    # own phase times
+    phase = getattr(eng, "last_phase_s", None) or {}
+    rep = throughput_report(comps, **phase)
     print("throughput:", {k: round(v, 2) if isinstance(v, float) else v
                           for k, v in rep.items()})
     return 0

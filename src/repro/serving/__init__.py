@@ -1,28 +1,49 @@
 """repro.serving substrate.
 
-Two engines over one model zoo:
+A layered serving stack over one model zoo (``docs/serving.md``
+"Layered architecture"):
 
+* :class:`~repro.serving.runner.ModelRunner` — device execution: paged
+  KV cache, compiled prefill/decode, donation, CoW row copies.  No
+  scheduling knowledge.  (:class:`~repro.serving.runner.BucketRunner`
+  is the same seam for the length-bucket baseline.)
+* :class:`~repro.serving.core.EngineCore` — one scheduler step + runner
+  dispatch + sequence bookkeeping per ``step()`` call, with an injected
+  :class:`~repro.serving.core.Clock` so tests never sleep.
+* Front-ends over the core:
+  :class:`~repro.serving.continuous.ContinuousServingEngine` (the
+  synchronous pre-declared-arrivals driver) and
+  :class:`~repro.serving.async_engine.AsyncEngine` (live
+  submit/stream/poll/cancel on a background stepper thread).
 * :class:`~repro.serving.engine.ServingEngine` — length-bucket batching
   (the paper's baseline discipline): simple, padding-free, but buckets
   run sequentially and nobody joins mid-decode.
-* :class:`~repro.serving.continuous.ContinuousServingEngine` — paged
-  KV-cache pool (``kv_pool``) + continuous-batching scheduler
-  (``scheduler``): slot-indexed running batch, per-step join/evict,
-  preemption under memory pressure, NUMA-aware page placement,
-  refcounted prefix caching (shared prompt pages, copy-on-write) and
-  chunked prefill (long prompts interleave with decode).
+
+Memory and policy under the hood: paged KV-cache pool (``kv_pool``,
+refcounted prefix caching + retention LRU + copy-on-write) and the
+continuous-batching scheduler (``scheduler``: per-step join/evict,
+chunked prefill, preemption under memory pressure).
 """
 
+from .async_engine import (AsyncEngine, AsyncEngineError, CancelledError,
+                           PollResult, RequestHandle, RequestState)
 from .continuous import ContinuousServingEngine
+from .core import (Clock, EngineCore, MonotonicClock, StepResult,
+                   VirtualClock)
 from .engine import (Completion, Request, ServingEngine,
                      throughput_report)
 from .kv_pool import KVCachePool, KVPoolConfig, PrefixCache, PrefixMatch
+from .runner import BucketRunner, ModelRunner
 from .sampler import SamplingParams, sample, sample_grouped
 from .scheduler import ContinuousScheduler, Schedule, Sequence
 
 __all__ = [
-    "Completion", "ContinuousScheduler", "ContinuousServingEngine",
-    "KVCachePool", "KVPoolConfig", "PrefixCache", "PrefixMatch", "Request",
-    "SamplingParams", "Schedule", "Sequence", "ServingEngine", "sample",
-    "sample_grouped", "throughput_report",
+    "AsyncEngine", "AsyncEngineError", "BucketRunner", "CancelledError",
+    "Clock", "Completion", "ContinuousScheduler",
+    "ContinuousServingEngine", "EngineCore", "KVCachePool", "KVPoolConfig",
+    "ModelRunner", "MonotonicClock", "PollResult", "PrefixCache",
+    "PrefixMatch", "Request", "RequestHandle", "RequestState",
+    "SamplingParams", "Schedule", "Sequence", "ServingEngine",
+    "StepResult", "VirtualClock", "sample", "sample_grouped",
+    "throughput_report",
 ]

@@ -1,69 +1,28 @@
-"""Continuous-batching serving engine over the paged KV pool.
+"""Synchronous batch driver over :class:`~repro.serving.core.EngineCore`.
 
-The second half of the serving subsystem (see ``scheduler`` and
-``kv_pool`` for the policy/memory halves): drives a slot-indexed
-running batch through one compiled decode step —
+``ContinuousServingEngine`` is the pre-declared-arrivals front of the
+layered serving stack (runner / core / async — ``docs/serving.md``
+"Layered architecture"): ``generate(requests, arrivals=)`` admits each
+request onto the core's timeline at its arrival offset, loops
+``EngineCore.step`` until everything drains, and parks on the injected
+clock when nothing is runnable (no busy-wait — with a
+:class:`~repro.serving.core.VirtualClock` idle waits cost zero wall
+time).  All engine mechanics — continuous batching, paged KV pool,
+prefix caching + retention, chunked prefill, copy-on-write, preemption
+— live in the core; this file is only the loop.
 
-* ``decode``  compiles **once** per engine: (B, 1) tokens + (B,)
-  positions + (B, max_pages) block tables are all data, so requests
-  join, leave, and get preempted without re-specialising XLA;
-* ``prefill`` compiles once per (padded chunk-bucket, context-page
-  bucket) pair — chunk buckets are next-power-of-two lengths with the
-  real length a traced scalar, so any prompt length reuses a handful
-  of compilations;
-* idle slots run with position −1: their K/V write lands on the
-  reserved scratch page and their attention is fully masked, so a
-  partially-empty batch is correct, just not free.
-
-Prefill is **chunked** (``prefill_chunk=``): a long prompt runs
-``prefill_chunk`` tokens per engine step, interleaved with everybody
-else's decode, so admission can never stall the decode batch for more
-than one chunk's worth of work (the admission-stall problem
-arXiv:2407.00029 §3 attacks with prefill/decode overlap).  Each chunk
-resumes at ``Sequence.n_prefilled`` via ``Model.prefill_paged(start=,
-ctx_pages=)``; only the final chunk's logits sample a token.
-
-Prefix caching (``prefix_cache=``): admission shares every resident
-page whose token-block prefix matches the new prompt (see
-``kv_pool.PrefixCache``), and the engine's duties are (a) applying the
-pool's queued copy-on-write page copies to the device cache *before*
-the step's forward passes, and (b) registering a prompt's pages in the
-prefix map once its prefill completes — i.e. once the KV bytes are
-actually resident, never earlier.
-
-Interleaving policy: prefill chunks happen at the step boundary before
-the decode is launched — the FCFS prefill/decode interleave of
-arXiv:2407.00029 §3.  Requests can carry real arrival times
-(``generate(..., arrivals=...)``): the engine sleeps only when nothing
-is runnable, which is exactly the regime where continuous batching
-beats the sequential length-bucket engine (it decodes early arrivals
-while late ones are still in flight).  ``decode_gaps_s`` records the
-wall gap between consecutive decode steps of a ``generate`` call — the
-bench uses ``max()`` of it to show chunking bounds the decode stall a
-long-prompt admission can cause.
+For live traffic (submit/stream/cancel while the engine steps) use
+:class:`~repro.serving.async_engine.AsyncEngine`, which drives the
+same core from a background stepper thread.
 """
 
 from __future__ import annotations
 
-import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Any, Dict, List, Optional, Sequence
 
 from ..models.transformer import Model
+from .core import Clock, EngineCore
 from .engine import Completion, Request
-from .kv_pool import KVCachePool, KVPoolConfig
-from .scheduler import ContinuousScheduler
-from .sampler import sample, sample_grouped
-
-
-def _pad_bucket(n: int, lo: int = 8) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
 
 
 class ContinuousServingEngine:
@@ -74,140 +33,27 @@ class ContinuousServingEngine:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = True,
                  window_override: Optional[int] = None,
-                 seed: int = 0) -> None:
-        cfg = model.cfg
-        self.model = model
-        self.params = params
-        self.max_len = max_len
-        self.max_running = max_running
-        self.page_size = page_size
-        self.max_pages = -(-max_len // page_size)
-        if n_pages is None:
-            # page 0 scratch + a full pool: every slot can reach max_len.
-            # Pass a smaller n_pages to trade memory for preemptions.
-            n_pages = 1 + max_running * self.max_pages
-        self.n_pages = n_pages
-        self.window_override = window_override
-        self._key = jax.random.PRNGKey(seed)
-
-        self.pool = KVCachePool(KVPoolConfig(
-            n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
-            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
-            dtype_bytes=jnp.dtype(cfg.dtype).itemsize, n_nodes=n_nodes,
-            numa=numa), prefix_cache=prefix_cache)
-        self.scheduler = ContinuousScheduler(
-            self.pool, max_running=max_running, max_len=max_len,
-            prefill_chunk=prefill_chunk)
-        self.cache = model.init_cache(max_running, max_len,
-                                      page_size=page_size, n_pages=n_pages)
-
-        # the cache argument is donated AND its page pool is a list of
-        # per-layer buffers outside any scan carry (the scan-escape
-        # layout, see ``Model.init_cache``): every step rebinds
-        # ``self.cache`` to the returned tree, each layer's only cache
-        # write is a row scatter, so XLA aliases each donated buffer to
-        # its output and updates K/V in place — per-step cache traffic
-        # is O(touched bytes), not O(pool bytes).  (The previous stacked
-        # (L, ...) pool rode the layer scan's carry; the scan's xs->ys
-        # copy put an O(pool bytes) floor on every decode step and
-        # prefill chunk — measured to dominate chunked prefill at 641
-        # pages.)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step(
-                p, c, t, pos, page_size=page_size,
-                window_override=window_override),
-            donate_argnums=1)
-        #: (padded chunk len, ctx page bucket) -> compiled prefill;
-        #: ctx bucket 0 is the one-shot fresh-sequence path
-        self._prefill_jits: Dict[Tuple[int, int], Any] = {}
-        # batched CoW page copier over the per-layer buffer list: one
-        # donated gather+scatter moves every queued page in-place on
-        # every layer (un-jitted .at[].set would copy each buffer once
-        # per page); row counts bucket so compiles stay few
-        self._copy_rows = jax.jit(
-            lambda layers, src, dst: jax.tree.map(
-                lambda a: a.at[dst].set(a[src]), layers),
-            donate_argnums=0)
-        #: wall-clock gaps between consecutive decode steps of the last
-        #: generate() call (bench: max gap == worst admission stall)
+                 seed: int = 0, clock: Optional[Clock] = None) -> None:
+        self.core = EngineCore(
+            model, params, max_len=max_len, max_running=max_running,
+            page_size=page_size, n_pages=n_pages, n_nodes=n_nodes,
+            numa=numa, prefill_chunk=prefill_chunk,
+            prefix_cache=prefix_cache, window_override=window_override,
+            seed=seed, clock=clock)
         self.decode_gaps_s: List[float] = []
+        self.last_phase_s: Dict[str, float] = {}
 
-    # ------------------------------------------------------------------
-    def _next_key(self) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return sub
+    # engine internals tests/benches reach for, now owned by the core
+    model = property(lambda self: self.core.model)
+    params = property(lambda self: self.core.params)
+    pool = property(lambda self: self.core.pool)
+    scheduler = property(lambda self: self.core.scheduler)
+    max_len = property(lambda self: self.core.max_len)
+    max_running = property(lambda self: self.core.max_running)
+    page_size = property(lambda self: self.core.page_size)
+    n_pages = property(lambda self: self.core.n_pages)
+    _decode = property(lambda self: self.core.runner._decode)
 
-    def _prefill_fn(self, padded_len: int, ctx_pages: int):
-        key = (padded_len, ctx_pages)
-        if key not in self._prefill_jits:
-            if ctx_pages:
-                self._prefill_jits[key] = jax.jit(
-                    lambda p, b, c, slot, plen, start:
-                    self.model.prefill_paged(
-                        p, b, c, slot, plen, start=start,
-                        ctx_pages=ctx_pages, page_size=self.page_size,
-                        window_override=self.window_override),
-                    donate_argnums=2)
-            else:
-                self._prefill_jits[key] = jax.jit(
-                    lambda p, b, c, slot, plen: self.model.prefill_paged(
-                        p, b, c, slot, plen, page_size=self.page_size,
-                        window_override=self.window_override),
-                    donate_argnums=2)
-        return self._prefill_jits[key]
-
-    def _sync_tables(self) -> None:
-        """Host block tables / positions -> device cache arrays."""
-        bt = np.zeros((self.max_running, self.max_pages), np.int32)
-        for slot, seq in self.scheduler.running.items():
-            pages = self.pool.block_table(seq.uid)
-            bt[slot, :len(pages)] = pages
-        self.cache["block_tables"] = jnp.asarray(bt)
-
-    def _apply_copies(self) -> None:
-        """Apply the pool's queued copy-on-write page copies to the
-        device cache (whole-page K/V row copies on every per-layer
-        buffer, one compiled dispatch).  Must run after scheduling and
-        before this step's forwards, so a resumed prefill or decode
-        reads the cloned rows, not scratch."""
-        copies = self.pool.drain_copies()
-        if not copies:
-            return
-        src, dst = self.pool.copy_row_plan(
-            copies, pad_to_pages=_pad_bucket(len(copies), lo=1))
-        self.cache = dict(self.cache)
-        self.cache["layers"] = self._copy_rows(
-            self.cache["layers"], jnp.asarray(src), jnp.asarray(dst))
-
-    def _run_prefill_chunk(self, seq) -> jax.Array:
-        """Run one prefill chunk for ``seq``; returns last-token logits
-        (meaningful only when the chunk completes the prompt)."""
-        full = seq.full_prompt
-        start = seq.n_prefilled
-        n = self.scheduler.chunk_for(seq)
-        padded = _pad_bucket(n)
-        toks = np.zeros((1, padded), np.int32)
-        toks[0, :n] = full[start:start + n]
-        batch = {"tokens": jnp.asarray(toks)}
-        if start == 0 and n == seq.prefill_target:
-            # fresh one-shot prompt: nothing resident to attend over
-            logits, self.cache = self._prefill_fn(padded, 0)(
-                self.params, batch, self.cache,
-                jnp.asarray(seq.slot, jnp.int32),
-                jnp.asarray(n, jnp.int32))
-        else:
-            ctx_pages = min(
-                _pad_bucket(-(-(start + n) // self.page_size), lo=1),
-                self.max_pages)
-            logits, self.cache = self._prefill_fn(padded, ctx_pages)(
-                self.params, batch, self.cache,
-                jnp.asarray(seq.slot, jnp.int32),
-                jnp.asarray(n, jnp.int32),
-                jnp.asarray(start, jnp.int32))
-        seq.n_prefilled += n
-        return logits
-
-    # ------------------------------------------------------------------
     def generate(self, requests: Sequence[Request], *,
                  arrivals: Optional[Sequence[float]] = None,
                  ) -> List[Completion]:
@@ -216,91 +62,27 @@ class ContinuousServingEngine:
         arrivals = list(arrivals or [0.0] * len(requests))
         if len(arrivals) != len(requests):
             raise ValueError("one arrival per request")
+        core = self.core
         for r in requests:
-            if len(r.prompt) >= self.max_len:
-                raise ValueError(
-                    f"request {r.uid}: prompt of {len(r.prompt)} tokens "
-                    f"does not fit max_len={self.max_len} (needs at least "
-                    "one decode slot)")
+            core.check_request(r)
         pending = sorted(zip(arrivals, range(len(requests))))
-        sched, pool = self.scheduler, self.pool
-
-        clock0 = time.perf_counter()
-        now = 0.0
-        prefill_s = decode_s = 0.0
-        t_last_decode = None
-        self.decode_gaps_s = []
-        meta: Dict[int, Dict[str, float]] = {}   # uid -> timing stamps
+        core.reset_run_stats()
+        clock0 = core.clock.now()
         done: List[Completion] = []
-
-        while pending or sched.has_work():
-            now = time.perf_counter() - clock0
+        while pending or core.has_work():
+            now = core.clock.now() - clock0
             while pending and pending[0][0] <= now:
                 t_arr, i = pending.pop(0)
-                seq = sched.submit(requests[i], arrival=t_arr)
-                meta[seq.uid] = {"t0": clock0 + t_arr}
-
-            plan = sched.step(now)
-            self._apply_copies()
-            for seq in plan.finished:
-                m = meta[seq.uid]
-                done.append(Completion(
-                    uid=seq.uid, prompt_len=len(seq.request.prompt),
-                    tokens=list(seq.generated),
-                    latency_s=m["t1"] - m["t0"],
-                    prefill_s=m.get("prefill", 0.0),
-                    t0=m["t0"], t1=m["t1"]))
-
-            if plan.prefills:
-                self._sync_tables()
-            for seq in plan.prefills:
-                t0 = time.perf_counter()
-                prompt = seq.full_prompt
-                logits = self._run_prefill_chunk(seq)
-                if not seq.is_prefilling:       # final chunk: sample
-                    tok = int(np.asarray(sample(
-                        logits, seq.request.sampling,
-                        self._next_key()))[0, 0])
-                    seq.generated.append(tok)
-                    # prompt KV is resident now — index it for reuse
-                    pool.register_prefix(seq.uid, prompt)
-                dt = time.perf_counter() - t0
-                prefill_s += dt
-                m = meta[seq.uid]
-                m["prefill"] = m.get("prefill", 0.0) + dt
-                if not seq.is_prefilling and seq.is_done(self.max_len):
-                    m["t1"] = time.perf_counter()
-
-            if plan.decodes:
-                t0 = time.perf_counter()
-                self._sync_tables()
-                pos = np.full((self.max_running,), -1, np.int32)
-                fed = np.zeros((self.max_running, 1), np.int32)
-                sps = [requests[0].sampling] * self.max_running  # dummy
-                for seq in plan.decodes:
-                    pos[seq.slot] = seq.next_pos - 1   # fed-token position
-                    fed[seq.slot, 0] = seq.generated[-1]
-                    sps[seq.slot] = seq.request.sampling
-                logits, self.cache = self._decode(
-                    self.params, self.cache, jnp.asarray(fed),
-                    jnp.asarray(pos))
-                toks = sample_grouped(logits, sps, self._next_key())
-                for seq in plan.decodes:
-                    seq.generated.append(int(toks[seq.slot, 0]))
-                    if seq.is_done(self.max_len):
-                        meta[seq.uid]["t1"] = time.perf_counter()
-                t1 = time.perf_counter()
-                if t_last_decode is not None:
-                    self.decode_gaps_s.append(t1 - t_last_decode)
-                t_last_decode = t1
-                decode_s += t1 - t0
-            elif not plan.prefills and pending:
-                # nothing runnable: wait for the next arrival
-                wait = pending[0][0] - (time.perf_counter() - clock0)
-                if wait > 0:
-                    time.sleep(min(wait, 0.05))
-
-        wall = time.perf_counter() - clock0
-        self.last_phase_s = {"wall_s": wall, "prefill_s": prefill_s,
-                             "decode_s": max(decode_s, 1e-9)}
+                core.submit(requests[i], arrival=t_arr, t0=clock0 + t_arr)
+            res = core.step(now)
+            done.extend(res.finished)
+            if res.idle and pending:
+                # nothing runnable: park until the next arrival
+                wait = pending[0][0] - (core.clock.now() - clock0)
+                core.clock.sleep(wait)
+        self.decode_gaps_s = core.decode_gaps_s
+        self.last_phase_s = {
+            "wall_s": core.clock.now() - clock0,
+            "prefill_s": core.phase_s["prefill_s"],
+            "decode_s": max(core.phase_s["decode_s"], 1e-9)}
         return sorted(done, key=lambda c: c.uid)

@@ -1,0 +1,298 @@
+"""Single-step engine core of the serving stack (``EngineCore``).
+
+Middle of the three-layer split (runner / core / async): one
+:meth:`EngineCore.step` call is exactly one iteration of the old
+monolithic continuous loop — scheduler step, queued copy-on-write page
+copies, prefill chunks, one batched decode, sampling, prefix
+registration and finish bookkeeping — with **no loop, no sleeping and
+no thread** of its own.  Anyone can drive it:
+
+* the synchronous driver (``ContinuousServingEngine.generate``) loops
+  it over a pre-declared arrivals list and must produce byte-identical
+  greedy tokens to the pre-split engine;
+* the :class:`~repro.serving.async_engine.AsyncEngine` stepper thread
+  loops it against a live, lock-guarded inbox;
+* tests call it step-by-step and assert on the returned
+  :class:`StepResult` without any timing races.
+
+Time is **injected** (:class:`Clock`): the core never calls
+``time.perf_counter`` or ``time.sleep`` directly, so a
+:class:`VirtualClock` lets arrival-staggered tests run without a
+single real sleep (idle waits advance virtual time for free) while the
+default :class:`MonotonicClock` gives production wall-clock stamps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..models.transformer import Model
+from .engine import Completion, Request
+from .kv_pool import KVCachePool, KVPoolConfig
+from .runner import ModelRunner, _pad_bucket
+from .sampler import sample, sample_grouped
+from .scheduler import ContinuousScheduler, Sequence
+
+
+class Clock:
+    """Injected time source.  ``now()`` is monotonic seconds;
+    ``sleep(dt)`` blocks (or virtually advances) for ``dt`` seconds."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def sleep(self, dt: float) -> None:
+        raise NotImplementedError
+
+
+class MonotonicClock(Clock):
+    """Real wall time (``time.perf_counter`` / ``time.sleep``)."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class VirtualClock(Clock):
+    """Deterministic test clock: ``sleep`` advances ``now()`` without
+    any wall time passing, so idle engine steps are free and
+    arrival-staggered workloads run as fast as the device allows."""
+
+    def __init__(self, start: float = 0.0) -> None:
+        self.t = start
+        self.slept_s = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            self.t += dt
+            self.slept_s += dt
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@dataclasses.dataclass
+class StepResult:
+    """What one :meth:`EngineCore.step` did.
+
+    ``emitted`` is every (uid, token) sampled this step in emission
+    order — the async layer's incremental delivery feed.  ``finished``
+    carries completed requests (tokens + timing stamps).  ``idle``
+    means no forward pass ran: the driver may park until the next
+    arrival/submission.
+    """
+
+    finished: List[Completion] = dataclasses.field(default_factory=list)
+    emitted: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    n_prefills: int = 0
+    n_decodes: int = 0
+
+    @property
+    def idle(self) -> bool:
+        return self.n_prefills == 0 and self.n_decodes == 0
+
+
+class EngineCore:
+    """Scheduler + runner + sequence bookkeeping, one step at a time."""
+
+    def __init__(self, model: Model, params, *, max_len: int = 1024,
+                 max_running: int = 8, page_size: int = 16,
+                 n_pages: Optional[int] = None, n_nodes: int = 1,
+                 numa: bool = True,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 window_override: Optional[int] = None,
+                 seed: int = 0, clock: Optional[Clock] = None) -> None:
+        cfg = model.cfg
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.max_running = max_running
+        self.page_size = page_size
+        if n_pages is None:
+            # page 0 scratch + a full pool: every slot can reach max_len.
+            # Pass a smaller n_pages to trade memory for preemptions.
+            n_pages = 1 + max_running * (-(-max_len // page_size))
+        self.n_pages = n_pages
+        self.clock = clock if clock is not None else MonotonicClock()
+        self._key = jax.random.PRNGKey(seed)
+
+        self.pool = KVCachePool(KVPoolConfig(
+            n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            dtype_bytes=np.dtype(cfg.dtype).itemsize, n_nodes=n_nodes,
+            numa=numa), prefix_cache=prefix_cache)
+        self.scheduler = ContinuousScheduler(
+            self.pool, max_running=max_running, max_len=max_len,
+            prefill_chunk=prefill_chunk)
+        self.runner = ModelRunner(
+            model, params, max_running=max_running, max_len=max_len,
+            page_size=page_size, n_pages=n_pages,
+            window_override=window_override)
+
+        self._meta: Dict[int, Dict[str, float]] = {}  # uid -> timing stamps
+        self._t_last_decode: Optional[float] = None
+        #: wall gaps between consecutive decode steps since the last
+        #: reset (bench: max gap == worst admission stall)
+        self.decode_gaps_s: List[float] = []
+        self.phase_s = {"prefill_s": 0.0, "decode_s": 0.0}
+
+    # ------------------------------------------------------------------
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def check_request(self, request: Request) -> None:
+        """Reject a request the engine can never serve.  Both limits
+        are caught HERE, at submit, so an impossible request fails its
+        own handle instead of raising inside the scheduler mid-step
+        (which would kill the async stepper for everyone)."""
+        if len(request.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt of {len(request.prompt)} "
+                f"tokens does not fit max_len={self.max_len} (needs at "
+                "least one decode slot)")
+        need = self.pool.cfg.pages_for(len(request.prompt) + 1)
+        if need > self.pool.cfg.max_pages_per_seq:
+            raise ValueError(
+                f"request {request.uid}: prompt needs {need} pages; "
+                f"pool only has {self.pool.cfg.max_pages_per_seq}")
+
+    def reset_run_stats(self) -> None:
+        """Zero the per-run accumulators (phase times, decode gaps)."""
+        self.decode_gaps_s = []
+        self._t_last_decode = None
+        self.phase_s = {"prefill_s": 0.0, "decode_s": 0.0}
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request, *, arrival: float = 0.0,
+               t0: Optional[float] = None) -> Sequence:
+        """Queue a request with the scheduler.  ``arrival`` is on the
+        driver's scheduling timeline (the ``now`` passed to ``step``);
+        ``t0`` is the absolute clock stamp latency is measured from
+        (defaults to the current clock)."""
+        self.check_request(request)
+        seq = self.scheduler.submit(request, arrival=arrival)
+        self._meta[seq.uid] = {
+            "t0": t0 if t0 is not None else self.clock.now()}
+        return seq
+
+    def cancel(self, seq: Sequence) -> bool:
+        """Tear a sequence down wherever it lives (queued, prefilling
+        or decoding): slot and every page reference free immediately.
+        Returns False when it already left the scheduler."""
+        out = self.scheduler.cancel(seq)
+        self._meta.pop(seq.uid, None)
+        return out
+
+    # ------------------------------------------------------------------
+    def _sync_tables(self) -> None:
+        """Host block tables -> device cache array."""
+        bt = np.zeros((self.max_running, self.runner.max_pages), np.int32)
+        for slot, seq in self.scheduler.running.items():
+            pages = self.pool.block_table(seq.uid)
+            bt[slot, :len(pages)] = pages
+        self.runner.set_block_tables(bt)
+
+    def _apply_copies(self) -> None:
+        """Apply the pool's queued copy-on-write page copies to the
+        device cache.  Must run after scheduling and before this step's
+        forwards, so a resumed prefill or decode reads the cloned rows,
+        not scratch."""
+        copies = self.pool.drain_copies()
+        if not copies:
+            return
+        src, dst = self.pool.copy_row_plan(
+            copies, pad_to_pages=_pad_bucket(len(copies), lo=1))
+        self.runner.apply_copy_rows(src, dst)
+
+    def _finish(self, seq: Sequence) -> Completion:
+        m = self._meta.pop(seq.uid)
+        return Completion(
+            uid=seq.uid, prompt_len=len(seq.request.prompt),
+            tokens=list(seq.generated), latency_s=m["t1"] - m["t0"],
+            prefill_s=m.get("prefill", 0.0), t0=m["t0"], t1=m["t1"],
+            t_first=m.get("t_first", m["t1"]))
+
+    # ------------------------------------------------------------------
+    def step(self, now: float = 0.0) -> StepResult:
+        """One engine step: schedule, apply CoW copies, run prefill
+        chunks, run the batched decode, sample, finish.  ``now`` gates
+        admission of waiting arrivals (driver-relative seconds)."""
+        clock = self.clock
+        plan = self.scheduler.step(now)
+        self._apply_copies()
+        res = StepResult(n_prefills=len(plan.prefills),
+                         n_decodes=len(plan.decodes))
+        for seq in plan.finished:
+            res.finished.append(self._finish(seq))
+
+        if plan.prefills:
+            self._sync_tables()
+        for seq in plan.prefills:
+            t0 = clock.now()
+            prompt = seq.full_prompt
+            start = seq.n_prefilled
+            n = self.scheduler.chunk_for(seq)
+            fresh = start == 0 and n == seq.prefill_target
+            logits = self.runner.prefill_chunk(
+                prompt[start:start + n], slot=seq.slot, start=start,
+                fresh=fresh)
+            seq.n_prefilled += n
+            m = self._meta[seq.uid]
+            if not seq.is_prefilling:           # final chunk: sample
+                tok = int(np.asarray(sample(
+                    logits, seq.request.sampling,
+                    self._next_key()))[0, 0])
+                seq.generated.append(tok)
+                res.emitted.append((seq.uid, tok))
+                # prompt KV is resident now — index it for reuse
+                self.pool.register_prefix(seq.uid, prompt)
+                m.setdefault("t_first", clock.now())
+            dt = clock.now() - t0
+            self.phase_s["prefill_s"] += dt
+            m["prefill"] = m.get("prefill", 0.0) + dt
+            if not seq.is_prefilling and seq.is_done(self.max_len):
+                m["t1"] = clock.now()
+
+        if plan.decodes:
+            t0 = clock.now()
+            self._sync_tables()
+            pos = np.full((self.max_running,), -1, np.int32)
+            fed = np.zeros((self.max_running, 1), np.int32)
+            # idle lanes borrow a real lane's params so grouping (and
+            # therefore key consumption) never depends on dead slots
+            sps = [plan.decodes[0].request.sampling] * self.max_running
+            for seq in plan.decodes:
+                pos[seq.slot] = seq.next_pos - 1    # fed-token position
+                fed[seq.slot, 0] = seq.generated[-1]
+                sps[seq.slot] = seq.request.sampling
+            logits = self.runner.decode(fed, pos)
+            toks = sample_grouped(logits, sps, self._next_key())
+            for seq in plan.decodes:
+                tok = int(toks[seq.slot, 0])
+                seq.generated.append(tok)
+                res.emitted.append((seq.uid, tok))
+                if seq.is_done(self.max_len):
+                    self._meta[seq.uid]["t1"] = clock.now()
+            t1 = clock.now()
+            if self._t_last_decode is not None:
+                self.decode_gaps_s.append(t1 - self._t_last_decode)
+            self._t_last_decode = t1
+            self.phase_s["decode_s"] += t1 - t0
+
+        return res

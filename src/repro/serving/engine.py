@@ -52,6 +52,9 @@ class Completion:
     #: whenever buckets ran sequentially)
     t0: float = 0.0
     t1: float = 0.0
+    #: absolute stamp of the FIRST generated token (TTFT = t_first - t0;
+    #: the serving_async bench compares engines on it)
+    t_first: float = 0.0
 
 
 class ServingEngine:
@@ -59,18 +62,17 @@ class ServingEngine:
                  cache_len: Optional[int] = None,
                  window_override: Optional[int] = None,
                  seed: int = 0) -> None:
+        # device execution lives behind the runner seam (same layering
+        # as the continuous stack: ModelRunner / EngineCore / drivers)
+        from .runner import BucketRunner
         self.model = model
         self.params = params
         self.max_len = max_len
         self.cache_len = cache_len
         self.window_override = window_override
         self._key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(
-                p, b, c, window_override=window_override))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step(
-                p, c, t, pos, window_override=window_override))
+        self.runner = BucketRunner(model, params,
+                                   window_override=window_override)
 
     # ------------------------------------------------------------------
     def _buckets(self, requests: Sequence[Request],
@@ -106,7 +108,6 @@ class ServingEngine:
         return sorted(out, key=lambda c: c.uid)
 
     def _run_bucket(self, bucket: List[Request]) -> List[Completion]:
-        model, params = self.model, self.params
         B = len(bucket)
         plen = len(bucket[0].prompt)
         tokens = jnp.asarray([r.prompt for r in bucket], jnp.int32)
@@ -114,12 +115,12 @@ class ServingEngine:
         for k in bucket[0].extra:
             batch[k] = jnp.asarray(
                 np.stack([np.asarray(r.extra[k]) for r in bucket]))
-        memory_len = 0
-        cache = model.init_cache(B, self.max_len, cache_len=self.cache_len,
-                                 memory_len=memory_len)
+        cache = self.runner.init_cache(B, self.max_len,
+                                       cache_len=self.cache_len,
+                                       memory_len=0)
 
         t0 = time.perf_counter()
-        logits, cache = self._prefill(params, batch, cache)
+        logits, cache = self.runner.prefill(batch, cache)
         logits.block_until_ready()
         t_prefill = time.perf_counter() - t0
 
@@ -130,6 +131,7 @@ class ServingEngine:
         done = np.zeros(B, bool)
         generated: List[List[int]] = [[] for _ in range(B)]
         cur = sample_grouped(logits, sps, self._next_key())
+        t_first = time.perf_counter()
         for step in range(max_new):
             for b, r in enumerate(bucket):
                 if done[b]:
@@ -142,13 +144,14 @@ class ServingEngine:
                     done[b] = True
             if done.all() or plen + step + 1 >= self.max_len:
                 break
-            logits, cache = self._decode(params, cache, jnp.asarray(cur),
-                                         jnp.asarray(plen + step))
+            logits, cache = self.runner.decode(cache, jnp.asarray(cur),
+                                               jnp.asarray(plen + step))
             cur = sample_grouped(logits, sps, self._next_key())
         t1 = time.perf_counter()
         return [Completion(uid=r.uid, prompt_len=plen,
                            tokens=generated[b], latency_s=t1 - t0,
-                           prefill_s=t_prefill, t0=t0, t1=t1)
+                           prefill_s=t_prefill, t0=t0, t1=t1,
+                           t_first=t_first)
                 for b, r in enumerate(bucket)]
 
 

@@ -17,7 +17,7 @@ weights and activations: pages stripe round-robin across node pools and
 On TPU the "node" is a mesh shard; on CPU it is a NUMA node the engine
 would ``mbind`` the page's carve-out to.
 
-Prefix caching (the serving claim this PR lands): KV bytes are a pure
+Prefix caching: KV bytes are a pure
 function of ``(token values, absolute positions)``, so two requests
 whose prompts agree on a page-aligned prefix can point their block
 tables at the *same* physical pages.  The pool keeps a **prompt-prefix
@@ -30,6 +30,18 @@ by **copy-on-write**: a fresh page is allocated, a ``(src, dst)`` copy
 is queued in :attr:`pending_copies`, and only the divergent suffix is
 recomputed.
 
+Retention (``retain=``, on by default with the prefix cache): a
+prefix-indexed page whose refcount drops to 0 is not forgotten — it
+moves to a **cached-free LRU** (:attr:`_retained`).  Its bytes stay
+resident and its prefix-map entries stay valid, so a repeat prompt hits
+the cache even after every sequence that wrote it has finished.
+Retained pages still count as allocatable (:meth:`n_free` includes
+them): when the true free lists run dry, :meth:`_take_page` evicts the
+least-recently-retired page (forgetting its prefix entries) — caching
+never costs capacity, only the reuse opportunity of whatever is
+evicted.  Sharing a retained page *revives* it (back to refcount 1,
+``retention_hits`` stat).
+
 Invariants (property-tested in ``tests/test_serving_paged.py`` and
 ``tests/test_prefix_chunking.py``):
 
@@ -37,10 +49,10 @@ Invariants (property-tested in ``tests/test_serving_paged.py`` and
   device-side scratch page that idle batch slots and padded prefill
   positions write into;
 * **refcount lifecycle** — every page in any live block table has
-  refcount >= 1; a page returns to its node free-list exactly when its
-  refcount drops to 0 (and its prefix-map entries are forgotten then);
-  ``release``/``free`` only ever decrement, so a shared page outlives
-  any single owner;
+  refcount >= 1; a page leaves the live set exactly when its refcount
+  drops to 0 (to its node free-list, or to the retained LRU when it is
+  prefix-indexed); ``release``/``free`` only ever decrement, so a
+  shared page outlives any single owner;
 * **immutability of shared pages** — a page with refcount > 1 is never
   written: writers go through :meth:`ensure_writable`, which swaps in a
   private copy-on-write page first;
@@ -52,6 +64,7 @@ Invariants (property-tested in ``tests/test_serving_paged.py`` and
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -123,9 +136,11 @@ class PrefixCache:
     content-verified on hit (``_tokens``) so a hash collision can only
     cost a missed reuse, never a wrong one.
 
-    The map only ever points at **live** pages: the pool forgets a
-    page's entries the moment its refcount drops to 0 (resident-only
-    caching; retention of finished sequences' pages is a ROADMAP item).
+    The map points at **resident** pages: live (refcount >= 1) or
+    retained (refcount 0, bytes intact, reclaimable).  The pool forgets
+    a page's entries when the page's bytes stop being trustworthy —
+    immediately at refcount 0 without retention, or at LRU eviction
+    with it.
     """
 
     def __init__(self, page_size: int) -> None:
@@ -186,6 +201,11 @@ class PrefixCache:
         return PrefixMatch(pages=tuple(pages), n_tokens=matched + cow_len,
                            cow_src=cow_src, cow_len=cow_len)
 
+    def is_indexed(self, pid: int) -> bool:
+        """True when the map holds entries pointing at page ``pid`` —
+        the retention test: only indexed pages are worth keeping."""
+        return pid in self._keys
+
     def forget(self, pid: int) -> None:
         for kind, key in self._keys.pop(pid, []):
             table = self._full if kind == "full" else self._next
@@ -200,7 +220,7 @@ class KVCachePool:
 
     def __init__(self, cfg: KVPoolConfig,
                  mm: Optional[MemoryManager] = None, *,
-                 prefix_cache: bool = True) -> None:
+                 prefix_cache: bool = True, retain: bool = True) -> None:
         if cfg.n_pages < 2:
             raise ValueError("need at least one usable page besides scratch")
         self.cfg = cfg
@@ -213,6 +233,11 @@ class KVCachePool:
         self._pages: Dict[int, List[int]] = {}      # seq uid -> logical order
         self._ref: Dict[int, int] = {}              # page id -> refcount
         self.prefix = PrefixCache(cfg.page_size) if prefix_cache else None
+        self.retain = retain and prefix_cache
+        #: cached-free LRU: prefix-indexed pages at refcount 0, oldest
+        #: retirement first — reclaimed by ``_take_page`` when the free
+        #: lists run dry, revived by ``share_pages`` on a prefix hit
+        self._retained: "OrderedDict[int, None]" = OrderedDict()
         #: device page copies the engine must apply before the next
         #: forward pass: list of (src page id, dst page id)
         self.pending_copies: List[Tuple[int, int]] = []
@@ -221,11 +246,17 @@ class KVCachePool:
             "shared_pages": 0,     # block-table entries served by sharing
             "cow_copies": 0,       # copy-on-write page clones
             "cached_tokens": 0,    # prompt tokens whose prefill was skipped
+            "retention_hits": 0,   # refcount-0 pages revived by sharing
+            "retained_evictions": 0,   # retained pages reclaimed when dry
         }
 
     # ------------------------------------------------------------------
     def n_free(self) -> int:
-        return sum(len(v) for v in self._free.values())
+        """Allocatable pages: truly free + retained (reclaimable)."""
+        return sum(len(v) for v in self._free.values()) + len(self._retained)
+
+    def n_retained(self) -> int:
+        return len(self._retained)
 
     def n_live(self) -> int:
         return len(self._ref)
@@ -238,12 +269,20 @@ class KVCachePool:
         return need <= self.n_free()
 
     def _take_page(self, node_hint: int) -> int:
-        """Pop a free page, preferring the hinted node's pool."""
+        """Pop a free page, preferring the hinted node's pool; when the
+        free lists are dry, evict the least-recently-retired cached
+        page (its prefix entries die with it)."""
         order = sorted(self._free, key=lambda n: (n != node_hint,
                                                   -len(self._free[n]), n))
         for node in order:
             if self._free[node]:
                 return self._free[node].pop()
+        if self._retained:
+            pid, _ = self._retained.popitem(last=False)   # LRU order
+            if self.prefix is not None:
+                self.prefix.forget(pid)
+            self.stats["retained_evictions"] += 1
+            return pid
         raise RuntimeError("KV pool exhausted")
 
     # ------------------------------------------------------------------
@@ -275,18 +314,24 @@ class KVCachePool:
 
     def free(self, uid: int) -> int:
         """Drop all of ``uid``'s page references; returns how many pages
-        actually went back to the free lists (shared pages survive until
-        their last reference is released)."""
+        left the live set (shared pages survive until their last
+        reference is released).  Refcount-0 pages that are prefix-
+        indexed retire to the retained LRU instead of the free list, so
+        repeat prompts can still hit them (``retain=``)."""
         pages = self._pages.pop(uid, [])
         freed = 0
         for pid in pages:       # stack top = last-written (warmest) page
             self._ref[pid] -= 1
             if self._ref[pid] == 0:
                 del self._ref[pid]
+                freed += 1
+                if (self.retain and self.prefix is not None
+                        and self.prefix.is_indexed(pid)):
+                    self._retained[pid] = None      # most recent at end
+                    continue
                 if self.prefix is not None:
                     self.prefix.forget(pid)
                 self._free[self.mm.kv_page_node(pid)].append(pid)
-                freed += 1
         if freed and self.pending_copies:
             # a queued clone whose target died (admission rollback,
             # same-step preemption) must not clobber the page's next owner
@@ -305,14 +350,22 @@ class KVCachePool:
     # prefix sharing protocol
     # ------------------------------------------------------------------
     def share_pages(self, uid: int, pages: Sequence[int]) -> None:
-        """Append references to already-live ``pages`` onto ``uid``'s
-        block table (refcount + 1 each).  The pages become immutable for
-        every holder until refcounts fall back to 1 (`ensure_writable`)."""
+        """Append references to resident ``pages`` onto ``uid``'s block
+        table (refcount + 1 each).  The pages become immutable for every
+        holder until refcounts fall back to 1 (`ensure_writable`).  A
+        *retained* page (refcount 0, still indexed) is revived: it
+        leaves the cached-free LRU and comes back at refcount 1 — the
+        cross-request prefix hit retention exists for."""
         table = self._pages.setdefault(uid, [])
         for pid in pages:
-            if pid == 0 or pid not in self._ref:
+            if pid in self._ref:
+                self._ref[pid] += 1
+            elif pid != 0 and pid in self._retained:
+                del self._retained[pid]
+                self._ref[pid] = 1
+                self.stats["retention_hits"] += 1
+            else:
                 raise ValueError(f"page {pid} is not live (cannot share)")
-            self._ref[pid] += 1
             table.append(pid)
             self.stats["shared_pages"] += 1
 
@@ -346,7 +399,9 @@ class KVCachePool:
             self._ref[dst] = 1
             self.stats["fresh_pages"] += 1
             self.stats["cow_copies"] += 1
-            self._pages[uid].append(dst)
+            # a divergence inside the FIRST block matches no full page,
+            # so the clone may be the table's very first entry
+            self._pages.setdefault(uid, []).append(dst)
             self.pending_copies.append((match.cow_src, dst))
         self.stats["cached_tokens"] += match.n_tokens
         return True

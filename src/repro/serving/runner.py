@@ -1,0 +1,182 @@
+"""Device-execution layer of the serving stack (``ModelRunner``).
+
+Bottom of the three-layer split (runner / core / async — see
+``docs/serving.md`` "Layered architecture"): a :class:`ModelRunner`
+owns everything that touches the device for the paged continuous
+engine — the per-layer paged KV cache, the compiled prefill / decode
+functions and their donation contracts, block-table upload, and the
+batched copy-on-write row copier — and knows **nothing** about
+scheduling, sequences, arrival times or sampling policy.  Its whole
+API is "run this chunk / this decode batch against the cache": the
+:class:`~repro.serving.core.EngineCore` turns `Schedule` decisions
+into these calls, and anything driving the core (the synchronous
+``generate`` driver, the async stepper thread, a test) gets the same
+compiled artifacts.
+
+Compilation contracts (moved verbatim from the pre-split engine, so
+compile counts and donation behaviour are unchanged):
+
+* ``decode`` compiles **once** per runner: (B, 1) tokens + (B,)
+  positions + block tables are all data, so batch membership changes
+  never re-specialise XLA;
+* ``prefill`` compiles once per (padded chunk bucket, context-page
+  bucket) pair — chunk buckets are next-power-of-two lengths with the
+  real length a traced scalar;
+* the cache argument is **donated** on both, and the paged pool is a
+  list of per-layer buffers outside any scan carry (the scan-escape
+  layout), so every step is an in-place row scatter costing O(touched
+  bytes), not O(pool bytes);
+* the CoW copier is one donated gather+scatter over the per-layer
+  buffer list, with row plans padded to buckets by the caller.
+
+:class:`BucketRunner` is the same seam for the length-bucket baseline
+(``serving.engine.ServingEngine``): per-(batch, prompt-len) prefill +
+per-batch decode jits over the ring cache, so both engines sit on one
+runner/sampling boundary.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import Model
+
+
+def _pad_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ModelRunner:
+    """Pure ``(device state, chunk/batch) -> logits`` execution over a
+    paged KV cache.  No scheduling knowledge; see module docstring."""
+
+    def __init__(self, model: Model, params: Any, *, max_running: int,
+                 max_len: int, page_size: int, n_pages: int,
+                 window_override: Optional[int] = None) -> None:
+        self.model = model
+        self.params = params
+        self.max_running = max_running
+        self.max_len = max_len
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_pages = -(-max_len // page_size)
+        self.window_override = window_override
+        self.cache = model.init_cache(max_running, max_len,
+                                      page_size=page_size, n_pages=n_pages)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(
+                p, c, t, pos, page_size=page_size,
+                window_override=window_override),
+            donate_argnums=1)
+        #: (padded chunk len, ctx page bucket) -> compiled prefill;
+        #: ctx bucket 0 is the one-shot fresh-sequence path
+        self._prefill_jits: Dict[Tuple[int, int], Any] = {}
+        # batched CoW page copier over the per-layer buffer list: one
+        # donated gather+scatter moves every queued page in-place on
+        # every layer (un-jitted .at[].set would copy each buffer once
+        # per page); row counts bucket so compiles stay few
+        self._copy_rows = jax.jit(
+            lambda layers, src, dst: jax.tree.map(
+                lambda a: a.at[dst].set(a[src]), layers),
+            donate_argnums=0)
+
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, padded_len: int, ctx_pages: int):
+        key = (padded_len, ctx_pages)
+        if key not in self._prefill_jits:
+            if ctx_pages:
+                self._prefill_jits[key] = jax.jit(
+                    lambda p, b, c, slot, plen, start:
+                    self.model.prefill_paged(
+                        p, b, c, slot, plen, start=start,
+                        ctx_pages=ctx_pages, page_size=self.page_size,
+                        window_override=self.window_override),
+                    donate_argnums=2)
+            else:
+                self._prefill_jits[key] = jax.jit(
+                    lambda p, b, c, slot, plen: self.model.prefill_paged(
+                        p, b, c, slot, plen, page_size=self.page_size,
+                        window_override=self.window_override),
+                    donate_argnums=2)
+        return self._prefill_jits[key]
+
+    def set_block_tables(self, tables: np.ndarray) -> None:
+        """Upload the host (max_running, max_pages) block-table array."""
+        self.cache["block_tables"] = jnp.asarray(tables)
+
+    def apply_copy_rows(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Apply a ``KVCachePool.copy_row_plan`` to every per-layer
+        buffer: whole-page K/V row copies, one compiled dispatch."""
+        self.cache = dict(self.cache)
+        self.cache["layers"] = self._copy_rows(
+            self.cache["layers"], jnp.asarray(src), jnp.asarray(dst))
+
+    def prefill_chunk(self, tokens: Sequence[int], *, slot: int,
+                      start: int, fresh: bool) -> jax.Array:
+        """Run one prefill chunk (``tokens`` at absolute positions
+        ``[start, start + len)``) into batch slot ``slot``; returns the
+        chunk's last-token logits.  ``fresh`` selects the cheaper
+        one-shot path (nothing resident to attend over)."""
+        n = len(tokens)
+        padded = _pad_bucket(n)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :n] = tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        if fresh:
+            logits, self.cache = self._prefill_fn(padded, 0)(
+                self.params, batch, self.cache,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(n, jnp.int32))
+        else:
+            ctx_pages = min(
+                _pad_bucket(-(-(start + n) // self.page_size), lo=1),
+                self.max_pages)
+            logits, self.cache = self._prefill_fn(padded, ctx_pages)(
+                self.params, batch, self.cache,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(n, jnp.int32),
+                jnp.asarray(start, jnp.int32))
+        return logits
+
+    def decode(self, fed: np.ndarray, pos: np.ndarray) -> jax.Array:
+        """One batched decode step: ``fed`` (max_running, 1) tokens,
+        ``pos`` (max_running,) absolute fed-token positions (-1 = idle
+        slot, masked + scratch-paged).  Returns (max_running, 1, V)."""
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(fed), jnp.asarray(pos))
+        return logits
+
+
+class BucketRunner:
+    """Device seam for the length-bucket baseline: ring-cache prefill +
+    lockstep decode jits, one compile per (batch, prompt-len) /
+    batch-size respectively."""
+
+    def __init__(self, model: Model, params: Any, *,
+                 window_override: Optional[int] = None) -> None:
+        self.model = model
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(
+                p, b, c, window_override=window_override))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(
+                p, c, t, pos, window_override=window_override))
+
+    def init_cache(self, batch: int, max_len: int, *,
+                   cache_len: Optional[int] = None,
+                   memory_len: int = 0) -> Dict[str, Any]:
+        return self.model.init_cache(batch, max_len, cache_len=cache_len,
+                                     memory_len=memory_len)
+
+    def prefill(self, batch: Dict[str, Any], cache: Dict[str, Any]):
+        return self._prefill(self.params, batch, cache)
+
+    def decode(self, cache: Dict[str, Any], tokens: jax.Array,
+               pos: jax.Array):
+        return self._decode(self.params, cache, tokens, pos)

@@ -142,6 +142,25 @@ class ContinuousScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    def cancel(self, seq: Sequence) -> bool:
+        """Remove ``seq`` from the scheduler wherever it lives —
+        waiting queue or running batch — releasing its slot and every
+        page reference (mid-prefill included: a partially-resident
+        prompt frees completely).  Returns False when ``seq`` is not
+        known (already finished, cancelled or preempted-and-raced)."""
+        if seq.slot >= 0 and self.running.get(seq.slot) is seq:
+            del self.running[seq.slot]
+            self._free_slots.append(seq.slot)
+            self.pool.release(seq.uid)
+            seq.slot = -1
+            return True
+        try:
+            self.waiting.remove(seq)
+        except ValueError:
+            return False
+        self.pool.release(seq.uid)      # no-op for queued sequences
+        return True
+
     def chunk_for(self, seq: Sequence) -> int:
         """Tokens the engine should prefill for ``seq`` this step."""
         remaining = seq.prefill_target - seq.n_prefilled
@@ -175,8 +194,13 @@ class ContinuousScheduler:
                 f"request {seq.uid}: prompt needs {need_total} pages; "
                 f"pool only has {pool.cfg.max_pages_per_seq}")
         match = pool.match_prefix(prompt)
-        # prefix-aware budget: cached pages are shared, not allocated
-        if need_total - len(match.pages) > pool.n_free():
+        # prefix-aware budget: cached pages are shared, not allocated —
+        # but a matched RETAINED page (refcount 0) is itself part of
+        # n_free()'s reclaimable count, and adopting it revives it, so
+        # it must not be counted as capacity for the uncached tail
+        matched_retained = sum(1 for p in match.pages
+                               if pool.refcount(p) == 0)
+        if need_total - len(match.pages) > pool.n_free() - matched_retained:
             return False
         hint = self._slot_node(slot)
         if not pool.adopt_prefix(seq.uid, match, node_hint=hint):

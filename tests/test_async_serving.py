@@ -1,0 +1,290 @@
+"""Layered serving stack (PR: ModelRunner / EngineCore / AsyncEngine).
+
+Core level: step-by-step driving with a VirtualClock (no sleeps, no
+threads), cancellation mid-prefill draining the pool.  Async level:
+sync-vs-async greedy token parity, live cancellation, stepper-thread
+exception propagation to ``poll``, ``shutdown()`` joining the thread,
+and the per-request state machine.  Thread-heavy cases are ``slow``
+(CI's tier1 lane runs ``-m "not slow"``).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.serving import (AsyncEngine, AsyncEngineError,
+                           ContinuousServingEngine, EngineCore, Request,
+                           RequestState, SamplingParams, ServingEngine,
+                           VirtualClock)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+MIXED_PROMPTS = [[1, 2, 3, 4, 5], [7, 8, 9], [10, 11, 12, 13, 14, 15, 16],
+                 [5, 4, 3], [9, 9, 2, 1]]
+
+
+def _reqs(max_new=5):
+    return [Request(uid=i, prompt=p,
+                    sampling=SamplingParams(max_new_tokens=max_new))
+            for i, p in enumerate(MIXED_PROMPTS)]
+
+
+class TestEngineCore:
+    def test_step_returns_emitted_tokens_and_finishes(self, tiny):
+        _, model, params = tiny
+        core = EngineCore(model, params, max_len=32, max_running=2,
+                          page_size=4, clock=VirtualClock())
+        seq = core.submit(Request(uid=0, prompt=[1, 2, 3],
+                                  sampling=SamplingParams(
+                                      max_new_tokens=3)))
+        emitted, finished, steps = [], [], 0
+        while core.has_work():
+            res = core.step()
+            emitted += [t for _, t in res.emitted]
+            finished += res.finished
+            steps += 1
+            assert steps < 20
+        assert len(finished) == 1 and finished[0].uid == 0
+        assert finished[0].tokens == emitted == seq.generated
+        assert core.pool.n_live() == 0
+
+    def test_cancel_mid_prefill_frees_all_pages(self, tiny):
+        """Deterministic mid-prefill cancel: chunked prefill leaves the
+        prompt partially resident after one step; cancel must release
+        every page reference and leave the pool clean."""
+        _, model, params = tiny
+        core = EngineCore(model, params, max_len=64, max_running=2,
+                          page_size=4, prefill_chunk=4,
+                          prefix_cache=False, clock=VirtualClock())
+        seq = core.submit(Request(uid=0, prompt=list(range(1, 18)),
+                                  sampling=SamplingParams(
+                                      max_new_tokens=4)))
+        core.step()
+        assert seq.is_prefilling and seq.slot >= 0   # mid-prefill
+        assert core.pool.n_live() > 0
+        assert core.cancel(seq)
+        assert seq.slot == -1
+        assert core.pool.n_live() == 0
+        assert core.pool.n_free() == core.pool.cfg.n_pages - 1
+        assert not core.has_work()
+        assert not core.cancel(seq)                  # second time: gone
+
+    def test_cancel_queued_sequence(self, tiny):
+        _, model, params = tiny
+        core = EngineCore(model, params, max_len=32, max_running=1,
+                          page_size=4, clock=VirtualClock())
+        a = core.submit(Request(uid=0, prompt=[1, 2, 3]))
+        b = core.submit(Request(uid=1, prompt=[4, 5, 6]))
+        core.step()                                  # a admits, b waits
+        assert b.slot == -1 and core.scheduler.waiting
+        assert core.cancel(b)
+        assert not core.scheduler.waiting
+        assert core.cancel(a)
+        assert core.pool.n_live() == 0
+
+    def test_virtual_clock_idle_waits_cost_no_wall_time(self, tiny):
+        """The old engine busy-slept real seconds between arrivals; the
+        injected clock makes the same workload run at device speed."""
+        _, model, params = tiny
+        clock = VirtualClock()
+        eng = ContinuousServingEngine(model, params, max_len=32,
+                                      max_running=2, page_size=4,
+                                      clock=clock)
+        reqs = [Request(uid=i, prompt=[3 + i, 5, 7],
+                        sampling=SamplingParams(max_new_tokens=4))
+                for i in range(2)]
+        t0 = time.perf_counter()
+        comps = eng.generate(reqs, arrivals=[0.0, 30.0])
+        wall = time.perf_counter() - t0
+        assert len(comps) == 2 and all(len(c.tokens) == 4 for c in comps)
+        assert clock.slept_s >= 29.0, "idle wait went through the clock"
+        assert wall < 10.0, "virtual sleep must not cost wall time"
+
+
+class TestAsyncEngine:
+    @pytest.mark.slow
+    def test_async_matches_sync_and_bucket_greedy_tokens(self, tiny):
+        _, model, params = tiny
+        reqs = _reqs()
+        bc = ServingEngine(model, params, max_len=48).generate(
+            reqs, max_batch=4)
+        sc = ContinuousServingEngine(model, params, max_len=48,
+                                     max_running=3,
+                                     page_size=4).generate(reqs)
+        with AsyncEngine(model, params, max_len=48, max_running=3,
+                         page_size=4) as eng:
+            handles = [eng.submit(r) for r in reqs]
+            ac = [eng.result(h, timeout=120) for h in handles]
+        assert [c.tokens for c in bc] == [c.tokens for c in sc]
+        assert [c.tokens for c in sc] == [c.tokens for c in ac]
+
+    @pytest.mark.slow
+    def test_stream_delivers_every_token_incrementally(self, tiny):
+        _, model, params = tiny
+        req = Request(uid=0, prompt=[1, 2, 3, 4, 5],
+                      sampling=SamplingParams(max_new_tokens=6))
+        with AsyncEngine(model, params, max_len=32, max_running=2,
+                         page_size=4) as eng:
+            h = eng.submit(req)
+            streamed = list(eng.stream(h, timeout=120))
+            comp = eng.result(h, timeout=10)
+        assert streamed == comp.tokens and len(streamed) == 6
+
+    @pytest.mark.slow
+    def test_states_progress_through_the_machine(self, tiny):
+        _, model, params = tiny
+        req = Request(uid=0, prompt=list(range(1, 14)),
+                      sampling=SamplingParams(max_new_tokens=5))
+        with AsyncEngine(model, params, max_len=32, max_running=2,
+                         page_size=4, prefill_chunk=2) as eng:
+            h = eng.submit(req)
+            seen = {h.state}
+            while True:
+                res = eng.poll(h)
+                seen.add(res.state)
+                if res.done:
+                    break
+                time.sleep(0.005)
+        assert res.state is RequestState.FINISHED
+        assert res.completion is not None
+        legal = {RequestState.QUEUED, RequestState.PREFILLING,
+                 RequestState.DECODING, RequestState.FINISHED}
+        assert seen <= legal and RequestState.FINISHED in seen
+
+    @pytest.mark.slow
+    def test_cancel_frees_pages_and_is_terminal(self, tiny):
+        """Cancel a long chunked prefill while the stepper is live: the
+        handle ends CANCELLED and the pool drains completely."""
+        _, model, params = tiny
+        long_req = Request(uid=0, prompt=list(range(1, 40)),
+                           sampling=SamplingParams(max_new_tokens=50))
+        with AsyncEngine(model, params, max_len=64, max_running=2,
+                         page_size=4, prefill_chunk=2,
+                         prefix_cache=False) as eng:
+            h = eng.submit(long_req)
+            deadline = time.perf_counter() + 60
+            while eng.poll(h).state is RequestState.QUEUED:
+                assert time.perf_counter() < deadline
+                time.sleep(0.002)
+            assert eng.cancel(h)
+            while not eng.poll(h).done:
+                assert time.perf_counter() < deadline
+                time.sleep(0.002)
+            assert eng.poll(h).state is RequestState.CANCELLED
+            # stepper idle now: pool state is stable to assert on
+            assert eng.core.pool.n_live() == 0
+            assert (eng.core.pool.n_free()
+                    == eng.core.pool.cfg.n_pages - 1)
+            assert eng.core.pool.pending_copies == []
+            assert not eng.cancel(h)                 # already terminal
+
+    @pytest.mark.slow
+    def test_stepper_exception_surfaces_on_poll(self, tiny):
+        _, model, params = tiny
+        eng = AsyncEngine(model, params, max_len=32, max_running=2,
+                          page_size=4)
+        boom = RuntimeError("injected stepper failure")
+
+        def exploding_step(now=0.0):
+            raise boom
+
+        eng.core.step = exploding_step
+        h = eng.submit(Request(uid=0, prompt=[1, 2, 3]))
+        deadline = time.perf_counter() + 30
+        while True:
+            assert time.perf_counter() < deadline
+            try:
+                res = eng.poll(h)
+            except AsyncEngineError as e:
+                assert e.__cause__ is boom
+                break
+            assert not res.done
+            time.sleep(0.002)
+        assert h.state is RequestState.FAILED
+        with pytest.raises(AsyncEngineError):      # submit fails too
+            eng.submit(Request(uid=1, prompt=[1]))
+        eng.shutdown()
+
+    @pytest.mark.slow
+    def test_oversized_prompt_fails_only_that_request(self, tiny):
+        _, model, params = tiny
+        with AsyncEngine(model, params, max_len=16, max_running=2,
+                         page_size=4) as eng:
+            bad = eng.submit(Request(uid=0, prompt=[1] * 17))
+            good = eng.submit(Request(uid=1, prompt=[1, 2, 3],
+                                      sampling=SamplingParams(
+                                          max_new_tokens=3)))
+            comp = eng.result(good, timeout=120)
+            assert len(comp.tokens) == 3
+            with pytest.raises(AsyncEngineError, match="failed"):
+                eng.result(bad, timeout=10)
+            assert bad.state is RequestState.FAILED
+            # terminal handles leave the registry (no per-request leak)
+            assert bad.uid not in eng._handles
+            assert good.uid not in eng._handles
+
+    @pytest.mark.slow
+    def test_prompt_exceeding_page_budget_fails_only_that_request(
+            self, tiny):
+        """A prompt that fits max_len but not the pool's per-sequence
+        page budget must fail its own handle at submit-validation, not
+        raise inside scheduler.step and kill the stepper."""
+        _, model, params = tiny
+        with AsyncEngine(model, params, max_len=32, max_running=2,
+                         page_size=4, n_pages=4) as eng:   # 3 usable
+            bad = eng.submit(Request(uid=0, prompt=[1] * 14))  # 4 pages
+            good = eng.submit(Request(uid=1, prompt=[1, 2, 3],
+                                      sampling=SamplingParams(
+                                          max_new_tokens=3)))
+            comp = eng.result(good, timeout=120)
+            assert len(comp.tokens) == 3
+            with pytest.raises(AsyncEngineError, match="failed"):
+                eng.result(bad, timeout=10)
+
+    @pytest.mark.slow
+    def test_shutdown_joins_thread_and_cancels_leftovers(self, tiny):
+        _, model, params = tiny
+        eng = AsyncEngine(model, params, max_len=48, max_running=2,
+                          page_size=4, prefill_chunk=1,
+                          prefix_cache=False)
+        h = eng.submit(Request(uid=0, prompt=list(range(1, 40)),
+                               sampling=SamplingParams(
+                                   max_new_tokens=40)))
+        eng.shutdown()
+        assert not eng._thread.is_alive()
+        assert h.state in (RequestState.CANCELLED, RequestState.FINISHED)
+        assert eng.core.pool.n_live() == 0
+        with pytest.raises(RuntimeError, match="shut down"):
+            eng.submit(Request(uid=1, prompt=[1]))
+        eng.shutdown()                               # idempotent
+
+    def test_emitted_feed_matches_generated(self, tiny):
+        """StepResult.emitted is the async delivery feed: across a full
+        core-driven run it must equal each sequence's generated list,
+        in order."""
+        _, model, params = tiny
+        core = EngineCore(model, params, max_len=32, max_running=2,
+                          page_size=4, clock=VirtualClock())
+        seqs = [core.submit(Request(uid=i, prompt=[1 + i, 2, 3],
+                                    sampling=SamplingParams(
+                                        max_new_tokens=4)))
+                for i in range(2)]
+        per_uid = {0: [], 1: []}
+        while core.has_work():
+            for uid, tok in core.step().emitted:
+                per_uid[uid].append(tok)
+        for s in seqs:
+            assert per_uid[s.uid] == s.generated

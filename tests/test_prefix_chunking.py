@@ -149,7 +149,11 @@ class TestPrefixMatching:
         assert m.n_tokens == 0 and not m.pages and m.cow_src is None
 
     def test_entries_die_with_their_page(self):
-        pool = _pool()
+        """Without retention, release forgets the entries immediately;
+        with it (default), they survive until the LRU evicts the page."""
+        pool = KVCachePool(KVPoolConfig(
+            n_pages=17, page_size=4, n_layers=2, n_kv_heads=2,
+            head_dim=8, dtype_bytes=4), retain=False)
         pool.grow(0, 9)
         prompt = list(range(1, 9))
         pool.register_prefix(0, prompt)
@@ -171,6 +175,124 @@ class TestPrefixMatching:
         # the clone + share satisfy 6 of the 9 tokens; grow covers rest
         assert pool.grow(1, 10)
         assert len(table) != 0 and pool.stats["cow_copies"] == 1
+
+
+class TestRetention:
+    """Prefix-page retention LRU: refcount-0 pages that are prefix-
+    indexed retire to a cached-free list instead of being forgotten,
+    and are evicted (LRU) only when the free lists run dry."""
+
+    def test_release_retains_indexed_pages(self):
+        pool = _pool(n_pages=17)
+        pool.grow(0, 9)                           # 3 pages (2 indexed)
+        prompt = list(range(1, 9))
+        pool.register_prefix(0, prompt)
+        pool.release(0)
+        assert pool.n_live() == 0
+        assert pool.n_retained() == 2             # indexed full pages
+        assert pool.n_free() == 16                # retained still count
+        m = pool.match_prefix(prompt + [99])
+        assert m.n_tokens == 8 and len(m.pages) == 2
+
+    def test_adopt_revives_retained_pages(self):
+        pool = _pool(n_pages=17)
+        pool.grow(0, 9)
+        prompt = list(range(1, 9))
+        pool.register_prefix(0, prompt)
+        pool.release(0)
+        m = pool.match_prefix(prompt + [99])
+        assert pool.adopt_prefix(1, m)
+        assert pool.n_retained() == 0
+        assert all(pool.refcount(p) == 1 for p in m.pages)
+        assert pool.stats["retention_hits"] == 2
+        pool.release(1)                           # back to retained
+        assert pool.n_retained() == 2
+
+    def test_eviction_when_free_list_runs_dry(self):
+        pool = _pool(n_pages=5)                   # 4 usable pages
+        pool.grow(0, 9)                           # takes 3
+        prompt = list(range(1, 9))
+        pool.register_prefix(0, prompt)
+        pool.release(0)                           # 2 retained + 2 free
+        assert pool.grow(1, 16)                   # needs all 4 pages
+        assert pool.n_retained() == 0
+        assert pool.stats["retained_evictions"] == 2
+        m = pool.match_prefix(prompt + [99])      # entries died at evict
+        assert m.n_tokens == 0 and not m.pages
+
+    def test_lru_evicts_oldest_retirement_first(self):
+        pool = _pool(n_pages=9)                   # 8 usable
+        pool.grow(0, 5)                           # 2 pages, 1 indexed
+        pool.register_prefix(0, [1, 2, 3, 4])
+        pool.grow(1, 5)
+        pool.register_prefix(1, [5, 6, 7, 8])
+        pool.release(0)                           # retired first
+        pool.release(1)
+        assert pool.n_retained() == 2
+        assert pool.grow(2, 4 * (8 - 2 + 1))      # force ONE eviction
+        assert pool.match_prefix([1, 2, 3, 4, 9]).n_tokens == 0
+        assert pool.match_prefix([5, 6, 7, 8, 9]).n_tokens == 4
+
+    def test_admission_budget_counts_matched_retained_pages_once(self):
+        """A matched retained page is both 'shared, not allocated' AND
+        part of n_free()'s reclaimable count — the budget must not use
+        it twice.  Here the prompt's tail needs 2 pages and n_free()
+        says 2, but one of those IS the matched retained page:
+        admission must refuse cleanly instead of adopt-then-rollback
+        (which would inflate stats on every retried step)."""
+        prompt = list(range(1, 9))                # 2 full pages @ ps=4
+        pool = _pool(n_pages=5)                   # 4 usable pages
+        pool.grow(0, 9)                           # donor: 3 pages
+        pool.register_prefix(0, prompt)
+        pool.release(0)                           # 2 retained, 2 free
+        pool.grow(9, 8)                           # bystander eats the
+        assert pool.n_retained() == 2             # 2 true-free pages
+        assert pool.n_free() == 2                 # both are retained
+        sched = ContinuousScheduler(pool, max_running=4, max_len=64)
+        # repeat prompt: 1 retained page + CoW match; tail needs the
+        # clone + decode page = 2, but reviving the match leaves 1
+        sched.submit(Request(uid=1, prompt=list(prompt)))
+        before = dict(pool.stats)
+        plan = sched.step()
+        assert not plan.prefills and not sched.running
+        assert pool.stats["retention_hits"] == before["retention_hits"]
+        assert pool.stats["shared_pages"] == before["shared_pages"]
+        assert pool.n_retained() == 2             # LRU undisturbed
+
+    def test_cow_only_match_against_retained_page(self):
+        """Divergence inside the FIRST block of a retained prompt:
+        the match shares no full page, only a CoW clone — adoption
+        must create the block table from scratch (regression: KeyError
+        when the clone was the table's first entry)."""
+        pool = _pool(n_pages=9, page_size=8)
+        pool.grow(0, 9)
+        pool.register_prefix(0, list(range(1, 9)))
+        pool.release(0)                           # first page retained
+        m = pool.match_prefix([1, 2, 3, 200, 201])
+        assert not m.pages and m.cow_src is not None and m.cow_len == 3
+        assert pool.adopt_prefix(1, m)
+        assert len(pool.block_table(1)) == 1
+        assert pool.pending_copies == [(m.cow_src, pool.block_table(1)[0])]
+
+    @pytest.mark.slow
+    def test_repeat_prompt_hits_cache_after_first_request_finished(
+            self, tiny):
+        """The cross-request claim: serve a prompt, let the request
+        finish completely (refcounts at 0), serve it again — the repeat
+        must hit retained pages, not re-prefill, with identical greedy
+        tokens."""
+        _, model, params = tiny
+        req = Request(uid=0, prompt=SHARED_PREFIX + [31, 32, 33],
+                      sampling=SamplingParams(max_new_tokens=6))
+        eng = ContinuousServingEngine(model, params, max_len=64,
+                                      max_running=4, page_size=4)
+        first = eng.generate([req])
+        assert eng.pool.n_live() == 0             # fully finished
+        assert eng.pool.n_retained() > 0
+        again = eng.generate([req])
+        assert [c.tokens for c in again] == [c.tokens for c in first]
+        assert eng.pool.stats["retention_hits"] > 0
+        assert eng.pool.stats["cached_tokens"] >= len(SHARED_PREFIX)
 
 
 class TestSchedulerPrefix:
@@ -374,24 +496,25 @@ class TestPerLayerCopies:
 
     def test_apply_copies_touches_every_layer_buffer(self, tiny):
         """A queued CoW copy must land in ALL per-layer K and V buffers
-        in one dispatch, and leave the engine cache rebound to the
+        in one dispatch, and leave the runner cache rebound to the
         copied (donated) buffers."""
         _, model, params = tiny
         eng = ContinuousServingEngine(model, params, max_len=32,
                                       max_running=2, page_size=4)
+        runner = eng.core.runner
         ps = 4
         src_page, dst_page = 2, 5
         rows = np.arange(src_page * ps, (src_page + 1) * ps)
-        for i, lyr in enumerate(eng.cache["layers"]):
+        for i, lyr in enumerate(runner.cache["layers"]):
             H, D = lyr["self"]["k"].shape[1:]
             vals = np.full((ps, H, D), float(i + 1), np.float32)
             lyr["self"]["k"] = lyr["self"]["k"].at[rows].set(vals)
             lyr["self"]["v"] = lyr["self"]["v"].at[rows].set(-vals)
         eng.pool.pending_copies.append((src_page, dst_page))
-        eng._apply_copies()
+        eng.core._apply_copies()
         assert eng.pool.pending_copies == []
         drows = np.arange(dst_page * ps, (dst_page + 1) * ps)
-        for i, lyr in enumerate(eng.cache["layers"]):
+        for i, lyr in enumerate(runner.cache["layers"]):
             np.testing.assert_array_equal(
                 np.asarray(lyr["self"]["k"][drows]),
                 np.full_like(np.asarray(lyr["self"]["k"][drows]),

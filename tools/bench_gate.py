@@ -1,12 +1,12 @@
 """Bench-regression gate (``tools/check.sh --bench``).
 
 Runs the key ``benchmarks/serving_bench.py`` sections, writes
-``BENCH_PR3.json`` at the repo root, and compares the tracked metrics
+``BENCH_PR4.json`` at the repo root, and compares the tracked metrics
 against a baseline read *before* the write: the committed/previous
-``BENCH_PR3.json`` itself when present, else the newest other
-``BENCH_*.json``.  Any metric that regresses more than the threshold
-(default 20%, knob: ``BENCH_REGRESSION_PCT`` env var or
-``--threshold``) fails the gate with a nonzero exit.
+``BENCH_PR4.json`` itself when present, else the newest other
+``BENCH_*.json`` (e.g. the PR 3 baseline).  Any metric that regresses
+more than the threshold (default 20%, knob: ``BENCH_REGRESSION_PCT``
+env var or ``--threshold``) fails the gate with a nonzero exit.
 
 Tracked metrics (direction-aware):
 
@@ -17,9 +17,13 @@ Tracked metrics (direction-aware):
                           claim in absolute terms
   decode_flatness         scan-escape t(p512)/t(p64) (v) — per-step
                           cost must stay flat as the pool grows 8x
+  async_ttft_p50_ms       serving_async live-submission TTFT median
+                          (v) — the async layer must not tax
+                          time-to-first-token (p99 is reported but not
+                          gated: 16 samples make it a max)
 
 Usage:
-  python tools/bench_gate.py run [--out BENCH_PR3.json] [--threshold 20]
+  python tools/bench_gate.py run [--out BENCH_PR4.json] [--threshold 20]
   python tools/bench_gate.py compare CURRENT.json BASELINE.json \
       [--threshold 20]
 
@@ -46,6 +50,7 @@ METRICS: Dict[str, Tuple[str, str]] = {
     "decode_step_ms_p512": ("serving_scan_escape.decode_step_ms.p512",
                             "lower"),
     "decode_flatness": ("serving_scan_escape.decode_flatness", "lower"),
+    "async_ttft_p50_ms": ("serving_async.ttft_p50_ms", "lower"),
 }
 
 
@@ -60,6 +65,7 @@ def collect() -> Dict[str, object]:
     rows: List[Tuple[str, float, str]] = []
     rows += serving_bench.serving_cb_rows()
     rows += serving_bench.serving_chunk_rows()
+    rows += serving_bench.serving_async_rows()
     rows += serving_bench.serving_scan_escape_rows()
     by_name = {name: derived for name, _us, derived in rows}
 
@@ -132,7 +138,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     run_p = sub.add_parser("run", help="run benches, write + compare")
-    run_p.add_argument("--out", default="BENCH_PR3.json")
+    run_p.add_argument("--out", default="BENCH_PR4.json")
     run_p.add_argument("--threshold", type=float, default=None,
                        help="regression threshold in percent")
     cmp_p = sub.add_parser("compare", help="compare two reports")

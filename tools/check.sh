@@ -12,7 +12,7 @@
 #                             # warning when ruff is not installed)
 #   tools/check.sh --bench    # bench-regression gate: runs the key
 #                             # serving_bench sections, writes
-#                             # BENCH_PR3.json, fails on a >20%
+#                             # BENCH_PR4.json, fails on a >20%
 #                             # regression vs the newest BENCH_*.json
 #                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
@@ -101,6 +101,10 @@ fi
 
 echo "== serving smoke: continuous engine, tiny arch =="
 python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \
+    --max-new 8 --max-running 4 --page-size 8 --prefill-chunk 16 \
+    --warmup-steps 0
+echo "== serving smoke: async engine, live submit/stream =="
+python -m repro.launch.serve --arch qwen3-1.7b --engine async \
     --max-new 8 --max-running 4 --page-size 8 --prefill-chunk 16 \
     --warmup-steps 0
 echo "== serving smoke: bucket baseline parity path =="
