@@ -43,6 +43,13 @@ against the batch-mode driver on the SAME Poisson workload:
   serving_async.greedy_parity
                      async and batch tokens must be identical
 
+The TP section (``serving_tp.*``, see :func:`serving_tp_rows`) runs
+the paged engine over ``model``-axis meshes of 1/2/4 shards in a child
+process with forced host devices: decode tok/s + TTFT per shard count,
+byte-identical greedy parity vs the plain engine, and the collective
+budget (one psum per layer, zero KV-page gathers) probed via
+``core.tp.collective_ops_in``.
+
 The scan-escape section is the evidence for the per-layer paged-cache
 layout (``Model.init_cache`` docstring, docs/serving.md "Cache memory
 layout"): per-step cost must be **flat in pool size** at fixed touched
@@ -506,10 +513,133 @@ def serving_scan_escape_rows() -> List[Row]:
     return rows_out
 
 
+TP_SHARDS = (1, 2, 4)
+
+
+def _tp_child() -> None:
+    """Child-process body of the ``serving_tp`` section (needs forced
+    host devices, which must be set before the first jax import — the
+    parent bench process keeps its single real CPU device).  Runs a
+    fixed Poisson workload through the paged engine plain and over
+    ``model``-axis meshes of every ``TP_SHARDS`` size, and prints one
+    JSON dict of measurements to stdout."""
+    import json
+
+    from repro.core.tp import collective_ops_in
+    from repro.launch.mesh import make_mesh
+    from repro.models import ModelConfig, build_model
+    from repro.serving import (ContinuousServingEngine, Request,
+                               SamplingParams, throughput_report)
+
+    cfg = ModelConfig(name="bench-tp", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    reqs = [Request(uid=i,
+                    prompt=list(rng.integers(1, 258, 6 + 4 * (i % 3))),
+                    sampling=SamplingParams(max_new_tokens=12))
+            for i in range(8)]
+    arrivals = np.cumsum(rng.exponential(0.05, size=len(reqs))).tolist()
+    max_len = max(len(r.prompt) for r in reqs) + 12 + 8
+
+    def run(mesh=None, n_nodes=1):
+        eng = ContinuousServingEngine(
+            model, params, max_len=max_len, max_running=8, page_size=8,
+            mesh=mesh, n_nodes=n_nodes)
+        eng.generate(reqs[:3])      # warm every prompt-length bucket
+        t0 = time.perf_counter()
+        comps = eng.generate(reqs, arrivals=arrivals)
+        wall = time.perf_counter() - t0
+        rep = throughput_report(
+            comps, wall_s=wall,
+            prefill_s=eng.last_phase_s["prefill_s"],
+            decode_s=wall - eng.last_phase_s["prefill_s"])
+        ttft = sorted(c.t_first - c.t0 for c in comps)
+        return eng, ([c.tokens for c in comps],
+                     rep["decode_tok_per_s"],
+                     ttft[len(ttft) // 2])
+
+    _, (ref_tokens, *_rest) = run()
+    out = {"parity": True}
+    for s in TP_SHARDS:
+        mesh = make_mesh((s,), ("model",))
+        eng, (tokens, toks_per_s, ttft_p50) = run(mesh, n_nodes=s)
+        out[f"s{s}"] = {"decode_toks_per_s": toks_per_s,
+                        "ttft_p50_ms": ttft_p50 * 1e3}
+        out["parity"] = out["parity"] and tokens == ref_tokens
+        if s == TP_SHARDS[-1]:
+            r = eng.core.runner
+            counts = collective_ops_in(
+                r.tp_raw_decode, r.params, r.cache,
+                jnp.ones((8, 1), jnp.int32), jnp.zeros((8,), jnp.int32))
+            out["psum_per_layer"] = counts.get("psum", 0) / cfg.n_layers
+            out["kv_gather_collectives"] = sum(
+                v for k, v in counts.items() if k != "psum")
+    print(json.dumps(out))
+
+
+def serving_tp_rows() -> List[Row]:
+    """Tensor-parallel paged serving over the ``model`` mesh axis
+    (shard ≅ NUMA node, forced host devices): per-shard KV page pools,
+    head-sharded paged attention, one psum per layer.
+
+      serving_tp.decode_toks_per_s.sN  continuous decode throughput on
+                         the fixed Poisson workload at N shards
+      serving_tp.ttft_p50_ms.sN        median time-to-first-token
+      serving_tp.greedy_parity         every shard count must produce
+                         byte-identical greedy tokens vs the plain
+                         single-shard engine
+      serving_tp.psum_per_layer        collectives in the compiled
+                         decode body (exactly 1 all-reduce per layer)
+      serving_tp.kv_gather_collectives non-psum collectives (must be 0:
+                         KV-page bytes never cross shards)
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count="
+                        + str(max(TP_SHARDS)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.serving_bench import _tp_child; _tp_child()"],
+        capture_output=True, text=True, env=env, cwd=root, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"serving_tp child failed:\n{proc.stderr[-3000:]}")
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    rows: List[Row] = []
+    for s in TP_SHARDS:
+        m = out[f"s{s}"]
+        rows.append((f"serving_tp.decode_toks_per_s.s{s}", 0.0,
+                     f"{m['decode_toks_per_s']:.1f}"))
+        rows.append((f"serving_tp.ttft_p50_ms.s{s}",
+                     m["ttft_p50_ms"] * 1e3,
+                     f"{m['ttft_p50_ms']:.1f}"))
+    rows += [
+        ("serving_tp.greedy_parity", 0.0,
+         "OK" if out["parity"] else "MISMATCH"),
+        ("serving_tp.psum_per_layer", 0.0,
+         f"{out['psum_per_layer']:.2f}"),
+        ("serving_tp.kv_gather_collectives", 0.0,
+         f"{out['kv_gather_collectives']}"),
+    ]
+    return rows
+
+
 def all_rows() -> List[Row]:
     return (serving_cb_rows() + serving_prefix_rows() +
             serving_chunk_rows() + serving_async_rows() +
-            serving_scan_escape_rows())
+            serving_scan_escape_rows() + serving_tp_rows())
 
 
 if __name__ == "__main__":

@@ -77,6 +77,13 @@ def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
     Hkv = k_pool.shape[1]
     G = Hq // Hkv
     n_pages = k_pool.shape[0] // page_size
+    # all shapes here may be the TP-local slice: under the head-sharded
+    # serving mesh (serving.runner mesh mode) this runs inside
+    # shard_map with Hq/Hkv divided by the shard count and the pool
+    # buffer holding only the local kv heads — the block-table gather
+    # is identical, the GQA group size G is shard-invariant, and no
+    # collective appears at this level (the head merge happens in the
+    # transformer, once per layer)
     k_pages = k_pool.reshape(n_pages, page_size, Hkv, D)
     v_pages = v_pool.reshape(n_pages, page_size, Hkv, D)
     qk = q.reshape(B, Hkv, G, D)

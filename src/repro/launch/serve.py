@@ -28,6 +28,21 @@ import dataclasses
 import sys
 
 
+def _print_shard_stats(pool) -> None:
+    """Per-shard / per-node KV pool residency under --tp-shards: every
+    shard reserves its head slice of every node's pages."""
+    shard = pool.capacity_bytes_per_shard()
+    node = pool.capacity_bytes_per_node()
+    live = pool.live_bytes_per_node()
+    print("tp pool: "
+          + ", ".join(f"shard{s} {b / 1024:.0f} KiB"
+                      for s, b in sorted(shard.items())))
+    print("tp pages: "
+          + ", ".join(f"node{n} {live.get(n, 0) / 1024:.0f}"
+                      f"/{b / 1024:.0f} KiB live"
+                      for n, b in sorted(node.items())))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
@@ -56,12 +71,25 @@ def main() -> int:
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="continuous engine: disable prompt-prefix "
                          "page sharing")
+    ap.add_argument("--tp-shards", type=int, default=1,
+                    help="continuous/async engines: tensor-parallel "
+                         "shards — forces that many host devices "
+                         "(shard ≅ NUMA node), head-shards the KV page "
+                         "pools over the mesh's 'model' axis")
     ap.add_argument("--warmup-steps", type=int, default=40,
                     help="brief LM warm-up so outputs aren't noise "
                          "(0 = random weights)")
     args = ap.parse_args()
 
+    import os
     import time
+
+    if args.tp_shards > 1:
+        # must land before the first jax import: device count is fixed
+        # at backend initialisation
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.tp_shards}")
 
     import jax
     import jax.numpy as jnp
@@ -86,6 +114,21 @@ def main() -> int:
     params = model.init(jax.random.PRNGKey(0))
     tok = ByteTokenizer()
     print(f"arch={cfg.name} (reduced, {cfg.param_count() / 1e6:.1f}M)")
+
+    mesh = None
+    if args.tp_shards > 1:
+        if args.engine == "bucket":
+            ap.error("--tp-shards serves through the paged engines; "
+                     "use --engine continuous or async")
+        from .mesh import make_mesh
+        if len(jax.devices()) < args.tp_shards:
+            ap.error(f"{len(jax.devices())} devices for "
+                     f"--tp-shards {args.tp_shards} (XLA_FLAGS was set "
+                     "too late — is jax imported before main()?)")
+        mesh = make_mesh((args.tp_shards,), ("model",))
+        print(f"tp mesh: {args.tp_shards}-way 'model' axis over "
+              f"{[d.platform for d in jax.devices()][0]} devices "
+              "(shard ≅ NUMA node)")
 
     if args.warmup_steps:
         print(f"warm-up training ({args.warmup_steps} steps) ...")
@@ -129,7 +172,8 @@ def main() -> int:
             if args.interactive else max_len,
             max_running=args.max_running, page_size=args.page_size,
             n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
-            prefix_cache=not args.no_prefix_cache)
+            prefix_cache=not args.no_prefix_cache, mesh=mesh,
+            n_nodes=max(args.tp_shards, 1))
         if args.interactive:
             print("interactive async demo — one prompt per line, "
                   "empty line or EOF quits")
@@ -159,6 +203,8 @@ def main() -> int:
               f"{st['shared_pages']} shared, {st['cow_copies']} CoW, "
               f"{st['cached_tokens']} prompt tokens from cache, "
               f"{st['retention_hits']} retention hits")
+        if mesh is not None:
+            _print_shard_stats(eng.core.pool)
         ttft = sorted(c.t_first - ts for c, ts in zip(comps, t_submit))
         print(f"ttft: p50 {ttft[len(ttft) // 2] * 1e3:.1f} ms, "
               f"max {ttft[-1] * 1e3:.1f} ms")
@@ -168,12 +214,15 @@ def main() -> int:
             model, params, max_len=max_len, max_running=args.max_running,
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk,
-            prefix_cache=not args.no_prefix_cache)
+            prefix_cache=not args.no_prefix_cache, mesh=mesh,
+            n_nodes=max(args.tp_shards, 1))
         comps = eng.generate(reqs)
         st = eng.pool.stats
         print(f"kv pool: {st['fresh_pages']} pages allocated, "
               f"{st['shared_pages']} shared, {st['cow_copies']} CoW, "
               f"{st['cached_tokens']} prompt tokens served from cache")
+        if mesh is not None:
+            _print_shard_stats(eng.pool)
     else:
         eng = ServingEngine(model, params, max_len=max_len)
         comps = eng.generate(reqs, max_batch=args.max_batch)

@@ -471,3 +471,91 @@ def cache_shardings(cfg: ModelConfig, cache_shapes: Any, mesh: Mesh,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# tensor-parallel paged serving (head-sharded page pools)
+# ----------------------------------------------------------------------
+#
+# The continuous engine's TP mode (``serving.runner.ModelRunner`` with
+# ``mesh=``) runs the whole paged forward inside ``shard_map`` over the
+# ``model`` axis — the paper's node≅shard mapping, with each mesh shard
+# standing in for one NUMA node.  The layout mirrors
+# ``make_decode_attn_hook``: per-shard attention over purely local KV
+# state, then ONE collective per layer to merge the partial outputs.
+# Here the cache splits by **kv head** instead of by sequence, so the
+# merge needs no LSE weighting — head outputs are disjoint, and the
+# Gather is a zero-padded psum (``make_paged_head_merge``).  Everything
+# outside attention (norms, MLP, embed/lm_head) stays replicated: the
+# per-layer collective budget is exactly one all-reduce, and no
+# collective ever touches KV-page bytes.
+
+#: attention leaves sharded on their output-feature (head) dim in the
+#: serving TP plan — the §3.2 "partitioned by attention heads" rule
+SERVING_TP_HEAD_SHARDED = ("w_q", "w_k", "w_v", "b_q", "b_k", "b_v")
+
+
+def serving_tp_param_specs(params_shapes: Any, *, axis: str = "model",
+                           ) -> Any:
+    """PartitionSpec tree for the paged TP serving engine.
+
+    ``w_q/w_k/w_v`` (L, d, heads*hd) and their biases (L, heads*hd)
+    shard their last (head) dim over ``axis``; every other leaf — w_o,
+    MLP, norms, embed, lm_head — is replicated, so the only partial
+    values in the forward are per-shard attention-head outputs and the
+    one psum of :func:`make_paged_head_merge` restores full replication
+    before ``w_o``.
+    """
+    def f(path, leaf):
+        p = _path_str(path)
+        name = p.split("/")[-1]
+        if name in SERVING_TP_HEAD_SHARDED and "attn" in p:
+            return P(*([None] * (leaf.ndim - 1) + [axis]))
+        return P()
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+def paged_cache_specs(cache_shapes: Any, *, axis: str = "model") -> Any:
+    """PartitionSpec tree for the paged device cache under TP.
+
+    Each per-layer flat pool buffer (rows, Hkv, D) shards its **kv-head
+    dim** over ``axis`` — every shard holds its head slice of every
+    page, so page allocation, sharing, CoW and eviction stay pure host
+    bookkeeping with zero cross-shard byte traffic.  Block tables (and
+    anything else host-written) replicate.
+    """
+    def f(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        if name in ("k", "v") and leaf.ndim == 3:
+            return P(None, axis, None)
+        return P()
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def make_paged_head_merge(n_heads: int, n_shards: int, *,
+                          axis: str = "model"):
+    """Gather for head-sharded paged attention (§3.3 applied to heads).
+
+    Inside the shard_map body each shard's attention output holds its
+    ``n_heads / n_shards`` local query heads.  The merge scatters that
+    slice into a zero tensor of the full head set at the shard's head
+    offset and psums over ``axis`` — head supports are disjoint, so the
+    sum is an exact concatenation (``x + 0.0 == x``), making the merged
+    tensor **bit-identical** to the single-shard attention output.  One
+    psum per layer, the TP forward's only collective.
+    """
+    import jax.numpy as jnp
+    if n_heads % n_shards:
+        raise ValueError(
+            f"{n_heads} query heads do not shard over {n_shards} shards")
+    local = n_heads // n_shards
+
+    def merge(out):                       # out: (B, S, H_local, D)
+        idx = jax.lax.axis_index(axis)
+        full = jnp.zeros(out.shape[:2] + (n_heads,) + out.shape[3:],
+                         out.dtype)
+        full = jax.lax.dynamic_update_slice_in_dim(
+            full, out, idx * local, 2)
+        return jax.lax.psum(full, axis)
+
+    return merge

@@ -273,6 +273,14 @@ def _self_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
     new_cache = None
     if cache is not None and paged is not None:
         out, new_cache = _paged_attn(cfg, q, k, v, window, cache, paged)
+        merge = paged.get("head_merge")
+        if merge is not None:
+            # head-sharded TP serving (launch.shardings.make_paged_head
+            # _merge): ``out`` holds this shard's local query heads —
+            # merge to the full head set (one psum, the layer's only
+            # collective) so the replicated w_o below sees the same
+            # operand as the single-shard engine, bit for bit
+            out = merge(out)
     elif cache is not None and decode_hook is not None and S == 1:
         # sequence-sharded flash-decoding with local cache write
         # (launcher-installed; see launch.shardings.make_decode_attn_hook)
@@ -445,6 +453,11 @@ class Model:
         self.cache_constraint = None
         self.attn_act_constraint = None   # pin q/k/v only for
                                           # replicated-attention archs
+        #: TP serving hook: merges a shard's local attention-head
+        #: outputs back to the full head set inside the paged path
+        #: (installed by serving.runner in mesh mode; the model itself
+        #: is then a per-shard "local" model with divided head counts)
+        self.paged_head_merge = None
 
     # ------------------------------------------------------------------
     # init
@@ -1009,6 +1022,8 @@ class Model:
                                 offsets % page_size)
         paged: Dict[str, Any] = {"page_size": page_size,
                                  "write_slots": write_slots}
+        if self.paged_head_merge is not None:
+            paged["head_merge"] = self.paged_head_merge
         if start is not None:
             if ctx_pages is None:
                 raise ValueError("resumed prefill needs static ctx_pages")
@@ -1080,6 +1095,8 @@ class Model:
         kv_len = jnp.maximum(pos + 1, 0)
         paged = {"page_size": page_size, "write_slots": write_slots,
                  "block_tables": bt, "kv_len": kv_len}
+        if self.paged_head_merge is not None:
+            paged["head_merge"] = self.paged_head_merge
         positions = safe_pos[:, None]                     # (B, 1) for RoPE
         x, new_layers, _ = self._run_paged_layers(
             params, x, positions, cache["layers"], single_step=True,

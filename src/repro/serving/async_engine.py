@@ -40,7 +40,7 @@ import dataclasses
 import enum
 import itertools
 import threading
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 from ..models.transformer import Model
 from .core import Clock, EngineCore
@@ -83,6 +83,9 @@ class RequestHandle:                # one in-flight request, never a value
     tokens: List[int] = dataclasses.field(default_factory=list)
     completion: Optional[Completion] = None
     error: Optional[BaseException] = None
+    #: per-token push callback (``submit(on_token=)``) — invoked by the
+    #: stepper thread OUTSIDE the engine lock, once per sampled token
+    on_token: Optional[Callable[[int], None]] = None
     _seq: Optional[Sequence] = None          # set once the stepper admits
     _n_polled: int = 0
 
@@ -134,15 +137,27 @@ class AsyncEngine:
     # ------------------------------------------------------------------
     # caller API
     # ------------------------------------------------------------------
-    def submit(self, request: Request) -> RequestHandle:
+    def submit(self, request: Request, *,
+               on_token: Optional[Callable[[int], None]] = None,
+               ) -> RequestHandle:
         """Queue a request for admission; returns immediately.  The
         engine assigns its own uid (``handle.uid``) so concurrent
-        clients can never collide."""
+        clients can never collide.
+
+        ``on_token`` is a push-style streaming hook for transports that
+        cannot poll (SSE writers, websockets, queues): the stepper
+        thread calls it once per sampled token, in order, **outside**
+        the engine lock (so it may safely call back into the engine).
+        Keep it fast — it runs on the stepper, so a slow callback slows
+        every request.  A raising callback fails *this* handle (its
+        sequence is torn down, pages freed), never the engine.
+        """
         with self._wake:
             self._check_alive()
             uid = next(self._uids)
             handle = RequestHandle(
-                uid=uid, request=dataclasses.replace(request, uid=uid))
+                uid=uid, request=dataclasses.replace(request, uid=uid),
+                on_token=on_token)
             self._handles[uid] = handle
             self._inbox.append(handle)
             self._wake.notify_all()
@@ -280,18 +295,35 @@ class AsyncEngine:
             self._die(e)                        # reach the callers
 
     def _publish(self, res) -> None:
+        callbacks: List[tuple] = []
         with self._update:
             for uid, tok in res.emitted:
                 handle = self._handles.get(uid)
                 if handle is not None:
                     handle.tokens.append(tok)
+                    if handle.on_token is not None:
+                        callbacks.append((handle, tok))
+            self._update.notify_all()       # pollers see the new tokens
+        # push-stream outside the lock: a callback may poll/cancel/submit
+        # without deadlocking, and a slow one never blocks pollers.  This
+        # runs BEFORE completions publish, so (a) by the time result()
+        # returns, every on_token fired — a transport can close its
+        # stream on result() without losing the tail — and (b) a
+        # raising final-token callback still fails its handle (the
+        # handle is not FINISHED yet)
+        for handle, tok in callbacks:
+            try:
+                handle.on_token(tok)
+            except BaseException as e:      # noqa: BLE001 — a client
+                self._fail_handle(handle, e)   # bug fails ITS handle only
+        with self._update:
             for comp in res.finished:
                 # terminal handles leave the registry (the caller keeps
                 # its own reference) so a long-lived engine's per-step
                 # state walk and memory track LIVE requests, not every
                 # request ever served
                 handle = self._handles.pop(comp.uid, None)
-                if handle is not None:
+                if handle is not None and not handle.done:
                     handle.completion = comp
                     handle.state = RequestState.FINISHED
             for handle in self._handles.values():
@@ -304,6 +336,20 @@ class AsyncEngine:
                     handle.state = RequestState.PREFILLING
                 else:
                     handle.state = RequestState.DECODING
+            self._update.notify_all()
+
+    def _fail_handle(self, handle: RequestHandle,
+                     exc: BaseException) -> None:
+        """Fail one handle from the stepper thread (bad ``on_token``):
+        tear its sequence down, free its pages, leave the engine up."""
+        with self._update:
+            if handle.done:     # cancelled/failed concurrently
+                return
+            if handle._seq is not None:
+                self.core.cancel(handle._seq)
+            handle.state = RequestState.FAILED
+            handle.error = exc
+            self._handles.pop(handle.uid, None)
             self._update.notify_all()
 
     def _die(self, exc: BaseException) -> None:

@@ -33,13 +33,14 @@ class ContinuousServingEngine:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = True,
                  window_override: Optional[int] = None,
+                 mesh=None, policy=None,
                  seed: int = 0, clock: Optional[Clock] = None) -> None:
         self.core = EngineCore(
             model, params, max_len=max_len, max_running=max_running,
             page_size=page_size, n_pages=n_pages, n_nodes=n_nodes,
             numa=numa, prefill_chunk=prefill_chunk,
             prefix_cache=prefix_cache, window_override=window_override,
-            seed=seed, clock=clock)
+            mesh=mesh, policy=policy, seed=seed, clock=clock)
         self.decode_gaps_s: List[float] = []
         self.last_phase_s: Dict[str, float] = {}
 

@@ -113,6 +113,7 @@ class EngineCore:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = True,
                  window_override: Optional[int] = None,
+                 mesh=None, policy=None,
                  seed: int = 0, clock: Optional[Clock] = None) -> None:
         cfg = model.cfg
         self.model = model
@@ -128,18 +129,24 @@ class EngineCore:
         self.clock = clock if clock is not None else MonotonicClock()
         self._key = jax.random.PRNGKey(seed)
 
+        # mesh mode (TP serving): each mesh shard stands in for one
+        # NUMA node (the paper's node≅shard mapping), so page planning
+        # stripes rows across n_nodes AND splits every page's bytes across
+        # the shards' head slices (KVPoolConfig.n_shards)
+        n_shards = (int(mesh.shape.get("model", 1))
+                    if mesh is not None else 1)
         self.pool = KVCachePool(KVPoolConfig(
             n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
             dtype_bytes=np.dtype(cfg.dtype).itemsize, n_nodes=n_nodes,
-            numa=numa), prefix_cache=prefix_cache)
+            numa=numa, n_shards=n_shards), prefix_cache=prefix_cache)
         self.scheduler = ContinuousScheduler(
             self.pool, max_running=max_running, max_len=max_len,
             prefill_chunk=prefill_chunk)
         self.runner = ModelRunner(
             model, params, max_running=max_running, max_len=max_len,
             page_size=page_size, n_pages=n_pages,
-            window_override=window_override)
+            window_override=window_override, mesh=mesh, policy=policy)
 
         self._meta: Dict[int, Dict[str, float]] = {}  # uid -> timing stamps
         self._t_last_decode: Optional[float] = None

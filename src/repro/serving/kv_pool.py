@@ -15,7 +15,13 @@ Placement is planned through :class:`repro.core.memory.MemoryManager`
 weights and activations: pages stripe round-robin across node pools and
 ``MemoryManager.per_node_bytes`` reports the whole model's residency.
 On TPU the "node" is a mesh shard; on CPU it is a NUMA node the engine
-would ``mbind`` the page's carve-out to.
+would ``mbind`` the page's carve-out to.  Under **tensor-parallel
+serving** (``KVPoolConfig.n_shards`` > 1, the engine's ``mesh=`` mode)
+a page's rows still stripe across nodes, but its *bytes* split across
+the mesh shards — each shard holds the page's local kv-head slice in a
+per-(node, shard) pool (``kv_page_placement``).  Nothing else here
+changes: page ids are global, so refcounts, the prefix map, retention
+and CoW plans are shard-agnostic host bookkeeping.
 
 Prefix caching: KV bytes are a pure
 function of ``(token values, absolute positions)``, so two requests
@@ -89,11 +95,20 @@ class KVPoolConfig:
     dtype_bytes: int = 4
     n_nodes: int = 1
     numa: bool = True
+    #: tensor-parallel mesh shards the pool is head-sharded over: each
+    #: page's bytes live 1/S on every shard (kv heads split S ways), so
+    #: planning carves a per-(node, shard) region for every page
+    n_shards: int = 1
 
     @property
     def page_bytes(self) -> int:
         return (2 * self.n_layers * self.page_size * self.n_kv_heads
                 * self.head_dim * self.dtype_bytes)
+
+    @property
+    def page_shard_bytes(self) -> int:
+        """One shard's slice of a page (its local kv-head block)."""
+        return self.page_bytes // self.n_shards
 
     @property
     def max_pages_per_seq(self) -> int:
@@ -224,9 +239,14 @@ class KVCachePool:
         if cfg.n_pages < 2:
             raise ValueError("need at least one usable page besides scratch")
         self.cfg = cfg
+        if cfg.n_shards > 1 and cfg.n_kv_heads % cfg.n_shards:
+            raise ValueError(
+                f"{cfg.n_kv_heads} kv heads do not head-shard over "
+                f"{cfg.n_shards} mesh shards")
         self.mm = mm if mm is not None else MemoryManager(
             cfg.n_nodes, numa=cfg.numa)
-        self.mm.plan_kv_pages(cfg.n_pages, cfg.page_bytes)
+        self.mm.plan_kv_pages(cfg.n_pages, cfg.page_bytes,
+                              n_shards=cfg.n_shards)
         self._free: Dict[int, List[int]] = {}
         for pid in range(cfg.n_pages - 1, 0, -1):   # page 0 stays reserved
             self._free.setdefault(self.mm.kv_page_node(pid), []).append(pid)
@@ -321,6 +341,8 @@ class KVCachePool:
         pages = self._pages.pop(uid, [])
         freed = 0
         for pid in pages:       # stack top = last-written (warmest) page
+            if pid == 0:        # window-recycled entry (release_below)
+                continue
             self._ref[pid] -= 1
             if self._ref[pid] == 0:
                 del self._ref[pid]
@@ -437,6 +459,48 @@ class KVCachePool:
         self.pending_copies.append((pid, dst))
         return True
 
+    def release_below(self, uid: int, pos: int) -> int:
+        """Sliding-window page recycling: drop ``uid``'s references to
+        every page that is **fully** below token position ``pos`` (all
+        ``page_size`` slots < pos), i.e. pages a window of ``pos``
+        onward can never attend over again.
+
+        The recycled block-table entries are rewritten to the scratch
+        page 0 — the table keeps its logical length, so position ->
+        page arithmetic for the still-resident tail is untouched; the
+        out-of-window positions resolve to scratch, which window
+        masking already excludes.  Refcount-aware exactly like
+        :meth:`free`: a shared page just loses one reference, and a
+        prefix-indexed page whose refcount hits 0 retires to the
+        retention LRU (bytes intact for future prefix hits) instead of
+        the free list.  Returns the number of references dropped.
+        """
+        table = self._pages.get(uid, [])
+        full_below = min(pos // self.cfg.page_size, len(table))
+        dropped = 0
+        for li in range(full_below):
+            pid = table[li]
+            if pid == 0:                    # already recycled
+                continue
+            table[li] = 0
+            dropped += 1
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                del self._ref[pid]
+                if (self.retain and self.prefix is not None
+                        and self.prefix.is_indexed(pid)):
+                    self._retained[pid] = None
+                    continue
+                if self.prefix is not None:
+                    self.prefix.forget(pid)
+                self._free[self.mm.kv_page_node(pid)].append(pid)
+        if dropped and self.pending_copies:
+            # same rule as free(): a queued clone whose target just left
+            # the live set must not clobber the page's next owner
+            self.pending_copies = [(s, d) for s, d in self.pending_copies
+                                   if d in self._ref]
+        return dropped
+
     def drain_copies(self) -> List[Tuple[int, int]]:
         """Hand the queued (src, dst) page copies to the engine."""
         out, self.pending_copies = self.pending_copies, []
@@ -479,8 +543,19 @@ class KVCachePool:
 
     def capacity_bytes_per_node(self) -> Dict[int, int]:
         """Planned (pre-allocated) KV bytes per node, from the planner's
-        pool peaks — what the node's carve-out actually reserves."""
+        pool peaks — what the node's carve-out actually reserves.  Under
+        TP this sums the node's per-shard pools (a page's bytes live 1/S
+        on each shard)."""
         out: Dict[int, int] = {}
         for p in self.mm.kv_pools:
             out[p.node_id or 0] = out.get(p.node_id or 0, 0) + p.peak
+        return out
+
+    def capacity_bytes_per_shard(self) -> Dict[int, int]:
+        """Planned KV bytes per mesh shard (``{0: total}`` without TP):
+        every shard reserves its head slice of every node's pages."""
+        out: Dict[int, int] = {}
+        for p in self.mm.kv_pools:
+            sid = p.shard_id or 0
+            out[sid] = out.get(sid, 0) + p.peak
         return out

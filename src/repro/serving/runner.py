@@ -37,6 +37,7 @@ runner/sampling boundary.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -55,11 +56,32 @@ def _pad_bucket(n: int, lo: int = 8) -> int:
 
 class ModelRunner:
     """Pure ``(device state, chunk/batch) -> logits`` execution over a
-    paged KV cache.  No scheduling knowledge; see module docstring."""
+    paged KV cache.  No scheduling knowledge; see module docstring.
+
+    ``mesh=`` switches on the **tensor-parallel mode** (the paper's §3
+    partition run over a JAX device mesh, shard ≅ NUMA node): every
+    per-layer page-pool buffer is laid out head-sharded over the
+    ``model`` axis (``NamedSharding`` on the Hkv dim — each shard holds
+    its head slice of *every* page), block tables upload replicated,
+    and the compiled decode / prefill / CoW-copy functions run the
+    forward inside ``shard_map``: a per-shard **local model** (head
+    counts divided by the shard count) attends only over its local
+    slice of the pool, and one zero-padded psum per layer
+    (``launch.shardings.make_paged_head_merge``) restores the full head
+    set before the replicated ``w_o`` — bit-identical maths to the
+    single-shard engine, one all-reduce per layer, zero cross-shard
+    KV-page traffic.  Donation still aliases each shard's pool buffers
+    in place.  ``policy`` (``launch.shardings.Policy``) is validated:
+    the TP mode implements the head-sharded cache layout
+    (``shard_cache_head_dim``) and requires head counts divisible by
+    the mesh's ``model`` axis (§3.2 "partitioned by attention heads").
+    """
 
     def __init__(self, model: Model, params: Any, *, max_running: int,
                  max_len: int, page_size: int, n_pages: int,
-                 window_override: Optional[int] = None) -> None:
+                 window_override: Optional[int] = None,
+                 mesh: Optional[Any] = None,
+                 policy: Optional[Any] = None) -> None:
         self.model = model
         self.params = params
         self.max_running = max_running
@@ -68,16 +90,23 @@ class ModelRunner:
         self.n_pages = n_pages
         self.max_pages = -(-max_len // page_size)
         self.window_override = window_override
+        self.mesh = mesh
+        self.tp_axis = "model"
+        self.tp_shards = (int(mesh.shape.get(self.tp_axis, 1))
+                          if mesh is not None else 1)
         self.cache = model.init_cache(max_running, max_len,
                                       page_size=page_size, n_pages=n_pages)
+        #: (padded chunk len, ctx page bucket) -> compiled prefill;
+        #: ctx bucket 0 is the one-shot fresh-sequence path
+        self._prefill_jits: Dict[Tuple[int, int], Any] = {}
+        if mesh is not None:
+            self._init_tp(policy)
+            return
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(
                 p, c, t, pos, page_size=page_size,
                 window_override=window_override),
             donate_argnums=1)
-        #: (padded chunk len, ctx page bucket) -> compiled prefill;
-        #: ctx bucket 0 is the one-shot fresh-sequence path
-        self._prefill_jits: Dict[Tuple[int, int], Any] = {}
         # batched CoW page copier over the per-layer buffer list: one
         # donated gather+scatter moves every queued page in-place on
         # every layer (un-jitted .at[].set would copy each buffer once
@@ -88,9 +117,73 @@ class ModelRunner:
             donate_argnums=0)
 
     # ------------------------------------------------------------------
+    # tensor-parallel mode
+    # ------------------------------------------------------------------
+    def _init_tp(self, policy: Optional[Any]) -> None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..launch.shardings import (make_paged_head_merge,
+                                        paged_cache_specs,
+                                        serving_tp_param_specs)
+
+        cfg = self.model.cfg
+        mesh, axis, S = self.mesh, self.tp_axis, self.tp_shards
+        if policy is not None and not policy.shard_cache_head_dim:
+            raise ValueError(
+                "TP serving implements the head-sharded KV layout; "
+                "Policy(shard_cache_head_dim=False) has no paged variant")
+        if cfg.n_heads % S or cfg.n_kv_heads % S:
+            raise ValueError(
+                f"arch {cfg.name!r}: {cfg.n_heads} query / "
+                f"{cfg.n_kv_heads} kv heads do not shard over the "
+                f"{S}-way {axis!r} mesh axis (§3.2 partitions by "
+                "attention heads)")
+        # per-shard local model: head counts divided, head_dim pinned
+        # (resolved_head_dim would otherwise re-derive from d_model)
+        local_cfg = dataclasses.replace(
+            cfg, n_heads=cfg.n_heads // S, n_kv_heads=cfg.n_kv_heads // S,
+            head_dim=cfg.resolved_head_dim)
+        self.local_model = Model(local_cfg)
+        self.local_model.paged_head_merge = make_paged_head_merge(
+            cfg.n_heads, S, axis=axis)
+
+        self._pspecs = serving_tp_param_specs(self.params, axis=axis)
+        self._cspecs = paged_cache_specs(self.cache, axis=axis)
+        self._repl = NamedSharding(mesh, P())
+        # bind params and pool buffers to their shard-local carve-outs
+        self.params = jax.device_put(
+            self.params, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), self._pspecs))
+        self.cache = jax.device_put(
+            self.cache, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), self._cspecs))
+
+        ps, wo = self.page_size, self.window_override
+        #: un-jitted shard_map decode — probe with
+        #: ``core.tp.collective_ops_in`` (one psum per layer, no
+        #: gather/scatter of KV pages)
+        self.tp_raw_decode = shard_map(
+            lambda p, c, t, pos: self.local_model.decode_step(
+                p, c, t, pos, page_size=ps, window_override=wo),
+            mesh=mesh, in_specs=(self._pspecs, self._cspecs, P(), P()),
+            out_specs=(P(), self._cspecs), check_rep=False)
+        self._decode = jax.jit(self.tp_raw_decode, donate_argnums=1)
+        self._copy_rows = jax.jit(
+            shard_map(
+                lambda layers, src, dst: jax.tree.map(
+                    lambda a: a.at[dst].set(a[src]), layers),
+                mesh=mesh,
+                in_specs=(self._cspecs["layers"], P(), P()),
+                out_specs=self._cspecs["layers"], check_rep=False),
+            donate_argnums=0)
+
+    # ------------------------------------------------------------------
     def _prefill_fn(self, padded_len: int, ctx_pages: int):
         key = (padded_len, ctx_pages)
-        if key not in self._prefill_jits:
+        if key in self._prefill_jits:
+            return self._prefill_jits[key]
+        if self.mesh is None:
             if ctx_pages:
                 self._prefill_jits[key] = jax.jit(
                     lambda p, b, c, slot, plen, start:
@@ -105,11 +198,38 @@ class ModelRunner:
                         p, b, c, slot, plen, page_size=self.page_size,
                         window_override=self.window_override),
                     donate_argnums=2)
+            return self._prefill_jits[key]
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        ps, wo, local = self.page_size, self.window_override, \
+            self.local_model
+        if ctx_pages:
+            body = (lambda p, b, c, slot, plen, start:
+                    local.prefill_paged(
+                        p, b, c, slot, plen, start=start,
+                        ctx_pages=ctx_pages, page_size=ps,
+                        window_override=wo))
+            in_specs = (self._pspecs, {"tokens": P()}, self._cspecs,
+                        P(), P(), P())
+        else:
+            body = (lambda p, b, c, slot, plen: local.prefill_paged(
+                p, b, c, slot, plen, page_size=ps, window_override=wo))
+            in_specs = (self._pspecs, {"tokens": P()}, self._cspecs,
+                        P(), P())
+        self._prefill_jits[key] = jax.jit(
+            shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                      out_specs=(P(), self._cspecs), check_rep=False),
+            donate_argnums=2)
         return self._prefill_jits[key]
 
     def set_block_tables(self, tables: np.ndarray) -> None:
-        """Upload the host (max_running, max_pages) block-table array."""
-        self.cache["block_tables"] = jnp.asarray(tables)
+        """Upload the host (max_running, max_pages) block-table array
+        (replicated across every shard in TP mode — tables are the
+        host-side page map, never sharded)."""
+        bt = jnp.asarray(tables)
+        if self.mesh is not None:
+            bt = jax.device_put(bt, self._repl)
+        self.cache["block_tables"] = bt
 
     def apply_copy_rows(self, src: np.ndarray, dst: np.ndarray) -> None:
         """Apply a ``KVCachePool.copy_row_plan`` to every per-layer

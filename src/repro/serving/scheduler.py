@@ -169,9 +169,11 @@ class ContinuousScheduler:
         return min(self.prefill_chunk, remaining)
 
     def _slot_node(self, slot: int) -> int:
-        """Home-node hint: stripe slots across the pool's nodes so each
-        node's threads mostly touch locally-resident KV pages."""
-        n = max(len(self.pool.mm.kv_pools), 1)
+        """Home-node hint: stripe slots across the pool's NUMA nodes so
+        each node's threads mostly touch locally-resident KV pages
+        (under TP the per-shard pools of one node count once — a page's
+        head-slices follow its node)."""
+        n = max(self.pool.mm.kv_node_count, 1)
         return slot % n
 
     def _requeue(self, seq: Sequence) -> None:

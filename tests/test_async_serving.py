@@ -271,6 +271,62 @@ class TestAsyncEngine:
             eng.submit(Request(uid=1, prompt=[1]))
         eng.shutdown()                               # idempotent
 
+    @pytest.mark.slow
+    def test_on_token_callback_streams_every_token_in_order(self, tiny):
+        """submit(on_token=) is the push transport seam: the stepper
+        must call it once per sampled token, in order, and the stream
+        must equal the completion's tokens."""
+        _, model, params = tiny
+        pushed = {0: [], 1: []}
+        with AsyncEngine(model, params, max_len=32, max_running=2,
+                         page_size=4) as eng:
+            handles = [
+                eng.submit(Request(uid=0, prompt=p,
+                                   sampling=SamplingParams(
+                                       max_new_tokens=6)),
+                           on_token=(lambda t, i=i: pushed[i].append(t)))
+                for i, p in enumerate([[1, 2, 3], [7, 8]])]
+            comps = [eng.result(h, timeout=300) for h in handles]
+        for i, c in enumerate(comps):
+            assert pushed[i] == c.tokens
+
+    @pytest.mark.slow
+    def test_raising_on_token_fails_only_that_handle(self, tiny):
+        _, model, params = tiny
+        with AsyncEngine(model, params, max_len=32, max_running=2,
+                         page_size=4) as eng:
+            bad = eng.submit(
+                Request(uid=0, prompt=[1, 2, 3],
+                        sampling=SamplingParams(max_new_tokens=6)),
+                on_token=lambda t: 1 / 0)
+            good = eng.submit(
+                Request(uid=0, prompt=[4, 5],
+                        sampling=SamplingParams(max_new_tokens=4)))
+            # raising only on the FINAL token must still fail the
+            # handle: callbacks run before the completion publishes
+            seen = []
+
+            def last_tok_boom(t):
+                seen.append(t)
+                if len(seen) == 3:
+                    raise RuntimeError("final-token transport died")
+
+            late = eng.submit(
+                Request(uid=0, prompt=[9, 9],
+                        sampling=SamplingParams(max_new_tokens=3)),
+                on_token=last_tok_boom)
+            comp = eng.result(good, timeout=300)   # engine survives
+            assert len(comp.tokens) == 4
+            with pytest.raises(AsyncEngineError) as ei:
+                eng.result(bad, timeout=300)
+            assert isinstance(ei.value.__cause__, ZeroDivisionError)
+            with pytest.raises(AsyncEngineError) as ei2:
+                eng.result(late, timeout=300)
+            assert isinstance(ei2.value.__cause__, RuntimeError)
+            assert len(seen) == 3
+            # the failed handles' pages drained back to the pool
+            assert eng.core.pool.n_live() == 0
+
     def test_emitted_feed_matches_generated(self, tiny):
         """StepResult.emitted is the async delivery feed: across a full
         core-driven run it must equal each sequence's generated list,

@@ -582,6 +582,48 @@ class TestBenchGate:
         cur = self._report(new_metric=(1.0, "lower"))
         assert bench_gate.compare(cur, base, threshold=0.2) == []
 
+    def test_new_and_dropped_metrics_are_reported_not_failed(self):
+        """A metric present only in the current run (first run of a
+        fresh bench, e.g. serving_tp.*) must neither fail the gate nor
+        vanish silently — ``schema_drift`` names it as ``new``; one
+        only in the baseline is named ``dropped``."""
+        import sys
+        import os
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "tools"))
+        import bench_gate
+        base = self._report(decode_tok_per_s=(100.0, "higher"),
+                            old_metric=(5.0, "lower"))
+        cur = self._report(decode_tok_per_s=(99.0, "higher"),
+                           tp_decode_tok_per_s=(450.0, "higher"))
+        drift = bench_gate.schema_drift(cur, base)
+        assert len(drift) == 2
+        assert any(d.startswith("tp_decode_tok_per_s: new metric")
+                   and "450" in d for d in drift)
+        assert any(d.startswith("old_metric: dropped metric")
+                   and "5" in d for d in drift)
+        assert bench_gate.schema_drift(cur, cur) == []
+
+    def test_compare_cli_prints_new_metric_and_passes(self, tmp_path):
+        import json
+        import subprocess
+        import sys
+        import os
+        root = os.path.join(os.path.dirname(__file__), "..")
+        base = self._report(decode_tok_per_s=(100.0, "higher"))
+        cur = self._report(decode_tok_per_s=(100.0, "higher"),
+                           tp_decode_tok_per_s=(450.0, "higher"))
+        bp, cp = tmp_path / "base.json", tmp_path / "cur.json"
+        bp.write_text(json.dumps(base))
+        cp.write_text(json.dumps(cur))
+        r = subprocess.run(
+            [sys.executable, os.path.join(root, "tools", "bench_gate.py"),
+             "compare", str(cp), str(bp)],
+            capture_output=True, text=True)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "tp_decode_tok_per_s: new metric" in r.stdout
+        assert "OK" in r.stdout
+
     def test_run_baseline_is_the_outfile_itself(self, tmp_path):
         """The committed BENCH_PR3.json must be read as the baseline
         BEFORE a run overwrites it — otherwise the wired gate can

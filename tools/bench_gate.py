@@ -1,10 +1,10 @@
 """Bench-regression gate (``tools/check.sh --bench``).
 
 Runs the key ``benchmarks/serving_bench.py`` sections, writes
-``BENCH_PR4.json`` at the repo root, and compares the tracked metrics
+``BENCH_PR5.json`` at the repo root, and compares the tracked metrics
 against a baseline read *before* the write: the committed/previous
-``BENCH_PR4.json`` itself when present, else the newest other
-``BENCH_*.json`` (e.g. the PR 3 baseline).  Any metric that regresses
+``BENCH_PR5.json`` itself when present, else the newest other
+``BENCH_*.json`` (e.g. the PR 4 baseline).  Any metric that regresses
 more than the threshold (default 20%, knob: ``BENCH_REGRESSION_PCT``
 env var or ``--threshold``) fails the gate with a nonzero exit.
 
@@ -21,9 +21,20 @@ Tracked metrics (direction-aware):
                           (v) — the async layer must not tax
                           time-to-first-token (p99 is reported but not
                           gated: 16 samples make it a max)
+  tp_decode_tok_per_s     serving_tp 2-shard decode throughput (^) on
+                          the forced-host-device mesh — the TP engine
+                          must not rot (absolute numbers are fake-
+                          device timings; the trend is what's gated)
+
+A metric present in the current run but NOT in the baseline (a freshly
+landed bench, e.g. the first ``serving_tp.*`` run) is reported as
+``new`` — visibly, so schema drift can neither fail the gate nor slip
+through silently; it becomes comparable once this run's report is the
+next baseline.  Metrics that vanished from the current run are
+reported as ``dropped`` the same way.
 
 Usage:
-  python tools/bench_gate.py run [--out BENCH_PR4.json] [--threshold 20]
+  python tools/bench_gate.py run [--out BENCH_PR5.json] [--threshold 20]
   python tools/bench_gate.py compare CURRENT.json BASELINE.json \
       [--threshold 20]
 
@@ -51,6 +62,7 @@ METRICS: Dict[str, Tuple[str, str]] = {
                             "lower"),
     "decode_flatness": ("serving_scan_escape.decode_flatness", "lower"),
     "async_ttft_p50_ms": ("serving_async.ttft_p50_ms", "lower"),
+    "tp_decode_tok_per_s": ("serving_tp.decode_toks_per_s.s2", "higher"),
 }
 
 
@@ -67,6 +79,7 @@ def collect() -> Dict[str, object]:
     rows += serving_bench.serving_chunk_rows()
     rows += serving_bench.serving_async_rows()
     rows += serving_bench.serving_scan_escape_rows()
+    rows += serving_bench.serving_tp_rows()
     by_name = {name: derived for name, _us, derived in rows}
 
     metrics = {}
@@ -89,8 +102,9 @@ def compare(current: Dict[str, object], baseline: Dict[str, object],
 
     A metric regresses when it moves in its bad direction by more than
     ``threshold`` (fraction, e.g. 0.2) relative to the baseline.
-    Metrics present in only one file are skipped (schema drift must not
-    fail the gate).
+    Metrics present in only one file never fail the gate (schema drift
+    is not a regression) — :func:`schema_drift` reports them so they
+    are never *silently* passed over either.
     """
     out: List[str] = []
     cur_m = current.get("metrics", {})
@@ -117,6 +131,26 @@ def compare(current: Dict[str, object], baseline: Dict[str, object],
     return out
 
 
+def schema_drift(current: Dict[str, object], baseline: Dict[str, object],
+                 ) -> List[str]:
+    """Metrics in exactly one of the two reports, as human-readable
+    lines: ``new`` = in the current run only (first run of a fresh
+    bench — tracked from now on, nothing to compare yet), ``dropped`` =
+    in the baseline only.  Informational: never fails the gate, but
+    always printed so a vanished or not-yet-compared metric can't pass
+    silently."""
+    cur_m = current.get("metrics", {})
+    base_m = baseline.get("metrics", {})
+    out = [f"{name}: new metric "
+           f"(current {float(cur_m[name]['value']):g}, no baseline — "
+           "compared from the next run)"
+           for name in sorted(set(cur_m) - set(base_m))]
+    out += [f"{name}: dropped metric (baseline "
+            f"{float(base_m[name]['value']):g}, absent from this run)"
+            for name in sorted(set(base_m) - set(cur_m))]
+    return out
+
+
 def load_baseline(root: str, out_path: str,
                   ) -> Tuple[Optional[Dict[str, object]], str]:
     """Pick the baseline for a ``run``: the committed/previous report
@@ -138,7 +172,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     run_p = sub.add_parser("run", help="run benches, write + compare")
-    run_p.add_argument("--out", default="BENCH_PR4.json")
+    run_p.add_argument("--out", default="BENCH_PR5.json")
     run_p.add_argument("--threshold", type=float, default=None,
                        help="regression threshold in percent")
     cmp_p = sub.add_parser("compare", help="compare two reports")
@@ -157,6 +191,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             current = json.load(f)
         with open(args.baseline) as f:
             baseline = json.load(f)
+        for d in schema_drift(current, baseline):
+            print(f"bench-gate {d}")
         regs = compare(current, baseline, threshold)
         for r in regs:
             print(f"bench-gate REGRESSION: {r}", file=sys.stderr)
@@ -183,6 +219,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0
     regs = compare(report, baseline, threshold)
     print(f"bench-gate: baseline {base_name}, threshold {pct:.0f}%")
+    for d in schema_drift(report, baseline):
+        print(f"bench-gate {d}")
     for r in regs:
         print(f"bench-gate REGRESSION: {r}", file=sys.stderr)
     print("bench-gate: " + ("FAILED" if regs else "OK"))

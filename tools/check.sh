@@ -12,7 +12,7 @@
 #                             # warning when ruff is not installed)
 #   tools/check.sh --bench    # bench-regression gate: runs the key
 #                             # serving_bench sections, writes
-#                             # BENCH_PR4.json, fails on a >20%
+#                             # BENCH_PR5.json, fails on a >20%
 #                             # regression vs the newest BENCH_*.json
 #                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
@@ -110,4 +110,8 @@ python -m repro.launch.serve --arch qwen3-1.7b --engine async \
 echo "== serving smoke: bucket baseline parity path =="
 python -m repro.launch.serve --arch qwen3-1.7b --engine bucket \
     --max-new 8 --warmup-steps 0
+echo "== serving smoke: tensor-parallel paged engine (2 shards) =="
+python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \
+    --tp-shards 2 --max-new 8 --max-running 4 --page-size 8 \
+    --warmup-steps 0
 echo "check.sh: OK"
