@@ -323,6 +323,104 @@ def serving_async_rows() -> List[Row]:
     ]
 
 
+def serving_obs_rows() -> List[Row]:
+    """Observability overhead gate (``docs/observability.md``): the
+    same saturated decode workload served twice — once under
+    ``NullRegistry`` + ``NullTracer`` (every instrument call a no-op)
+    and once fully instrumented (real registry, real tracer) — must
+    agree on decode tok/s within the 3% budget.  The two modes run
+    **interleaved** (alternating which goes first each round) and the
+    overhead is the minimum of two estimators — the median of
+    per-round paired throughput ratios and the best-of-N ceiling
+    comparison — because on a shared container either one alone
+    false-positives on noise while a real per-token cost registers
+    in both (see the comment at the computation).  The throughput
+    rows report best-of-round per mode.
+
+      serving_obs.decode_toks_per_s.noop / .instrumented
+      serving_obs.overhead_pct     min(paired-median, best-vs-best)
+      serving_obs.overhead_budget  OK when overhead_pct <= 3
+      serving_obs.trace_events     events the instrumented run recorded
+      serving_obs.snapshot_valid   snapshot passes the repro.obs schema
+    """
+    from repro.obs import (NullRegistry, NullTracer, RequestTracer,
+                           validate_events, validate_snapshot)
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serving import ContinuousServingEngine
+
+    import dataclasses
+
+    model, params, reqs, _arrivals = _setup()
+    for r in reqs:                  # saturate: every request at t=0
+        r.sampling = dataclasses.replace(r.sampling, max_new_tokens=96)
+    max_len = max(len(r.prompt) for r in reqs) + 96 + 8
+    REPEATS = 8
+
+    def make(registry, tracer):
+        eng = ContinuousServingEngine(
+            model, params, max_len=max_len, max_running=8, page_size=8,
+            prefix_cache=False, registry=registry, tracer=tracer)
+        eng.generate(reqs)          # warm every prefill/decode shape
+        return eng
+
+    def timed(eng):
+        t0 = time.perf_counter()
+        comps = eng.generate(reqs)
+        wall = time.perf_counter() - t0
+        return sum(len(c.tokens) for c in comps) / wall
+
+    noop_eng = make(NullRegistry(), NullTracer())
+    registry, tracer = MetricsRegistry(), RequestTracer()
+    eng = make(registry, tracer)
+    ratios = []
+    noop = instr = 0.0
+    for round_ in range(REPEATS):   # alternate modes within each round
+        if round_ % 2:              # swap order to cancel position bias
+            i = timed(eng)
+            n = timed(noop_eng)
+        else:
+            n = timed(noop_eng)
+            i = timed(eng)
+        noop, instr = max(noop, n), max(instr, i)
+        ratios.append(i / n)        # paired: same round, same drift
+
+    # Two estimators with opposite failure modes, overhead = their
+    # minimum.  Median paired ratio: adjacent samples share the same
+    # machine state, so their ratio isolates instrumentation cost —
+    # but correlated jitter across rounds can still skew the median.
+    # Best-vs-best: with contention noise strictly one-sided (the
+    # machine only ever slows a sample down), best-of-N per mode
+    # converges on each mode's clean ceiling — but a single lucky
+    # noop draw can fake an overhead.  A *real* per-token cost (a
+    # dict build or lock acquisition inside ``EngineCore.step()``)
+    # depresses every instrumented sample and shows up in both.
+    ratios.sort()
+    mid = len(ratios) // 2
+    med = (ratios[mid] if len(ratios) % 2
+           else (ratios[mid - 1] + ratios[mid]) / 2.0)
+    paired = max((1.0 - med) * 100.0, 0.0)
+    ceiling = max((noop - instr) / max(noop, 1e-9) * 100.0, 0.0)
+    overhead = min(paired, ceiling)
+    snap_ok = not validate_snapshot(registry.snapshot())
+    # the warm-up + repeats reuse uids, so lifecycles repeat per uid;
+    # validate uid 0's FIRST lifecycle (submit .. FINISHED)
+    ev0 = tracer.events(0)
+    end = next((i for i, e in enumerate(ev0) if e.name == "FINISHED"),
+               None)
+    trace_ok = end is not None and not validate_events(ev0[:end + 1])
+    return [
+        ("serving_obs.decode_toks_per_s.noop", 0.0, f"{noop:.1f}"),
+        ("serving_obs.decode_toks_per_s.instrumented", 0.0,
+         f"{instr:.1f}"),
+        ("serving_obs.overhead_pct", 0.0, f"{overhead:.2f}"),
+        ("serving_obs.overhead_budget", 0.0,
+         "OK" if overhead <= 3.0 else "OVER"),
+        ("serving_obs.trace_events", 0.0, f"{len(tracer.events())}"),
+        ("serving_obs.snapshot_valid", 0.0,
+         "OK" if snap_ok and trace_ok else "INVALID"),
+    ]
+
+
 def _best_of(fn, *, repeats: int = 3, steps: int = 16) -> float:
     """Best-of-``repeats`` mean seconds per call of ``fn(steps)``."""
     best = float("inf")
@@ -639,7 +737,8 @@ def serving_tp_rows() -> List[Row]:
 def all_rows() -> List[Row]:
     return (serving_cb_rows() + serving_prefix_rows() +
             serving_chunk_rows() + serving_async_rows() +
-            serving_scan_escape_rows() + serving_tp_rows())
+            serving_obs_rows() + serving_scan_escape_rows() +
+            serving_tp_rows())
 
 
 if __name__ == "__main__":

@@ -13,6 +13,11 @@ through the live ``AsyncEngine`` (submit/stream on a background
 stepper thread) — add ``--interactive`` for a stdin demo that streams
 each prompt's tokens as they are sampled.
 
+Observability (paged engines): ``--metrics-json PATH`` writes the
+metrics registry snapshot on exit, ``--trace PATH`` records per-request
+trace spans as JSONL, ``--stats-every SECS`` prints a periodic metrics
+line while the async engine serves (``docs/observability.md``).
+
 Examples:
     python -m repro.launch.serve --arch gemma3-1b --max-new 24
     python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \\
@@ -79,7 +84,22 @@ def main() -> int:
     ap.add_argument("--warmup-steps", type=int, default=40,
                     help="brief LM warm-up so outputs aren't noise "
                          "(0 = random weights)")
+    ap.add_argument("--metrics-json", metavar="PATH", default=None,
+                    help="paged engines: write the metrics registry "
+                         "snapshot (JSON, repro.obs schema) on exit")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="paged engines: record per-request trace "
+                         "spans and write them as JSONL on exit")
+    ap.add_argument("--stats-every", type=float, default=0.0,
+                    metavar="SECS",
+                    help="async engine: print a one-line metrics "
+                         "summary every SECS seconds while serving")
     args = ap.parse_args()
+
+    if args.engine == "bucket" and (args.metrics_json or args.trace
+                                    or args.stats_every):
+        ap.error("--metrics-json/--trace/--stats-every report the paged "
+                 "serving stack; use --engine continuous or async")
 
     import os
     import time
@@ -166,6 +186,14 @@ def main() -> int:
         reqs.append(Request(uid=i, prompt=tok.encode(p), sampling=sp,
                             extra=extra))
     max_len = max(len(r.prompt) for r in reqs) + args.max_new + 8
+    tracer = None
+    if args.trace:
+        from ..obs import RequestTracer
+        tracer = RequestTracer()
+    #: metrics the periodic --stats-every line summarises
+    stat_names = ("serving.steps", "scheduler.running",
+                  "scheduler.queue_depth", "scheduler.preemptions",
+                  "serving.tokens.decode", "kv_pool.pages_free")
     if args.engine == "async":
         eng = AsyncEngine(
             model, params, max_len=max(max_len, 256 + args.max_new)
@@ -173,7 +201,7 @@ def main() -> int:
             max_running=args.max_running, page_size=args.page_size,
             n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
             prefix_cache=not args.no_prefix_cache, mesh=mesh,
-            n_nodes=max(args.tp_shards, 1))
+            n_nodes=max(args.tp_shards, 1), tracer=tracer)
         if args.interactive:
             print("interactive async demo — one prompt per line, "
                   "empty line or EOF quits")
@@ -197,6 +225,13 @@ def main() -> int:
         for r in reqs:          # live submission: all clients at once
             t_submit.append(time.perf_counter())
             handles.append(eng.submit(r))
+        if args.stats_every:
+            next_stat = time.perf_counter() + args.stats_every
+            while not all(h.done for h in handles):
+                time.sleep(min(0.05, args.stats_every))
+                if time.perf_counter() >= next_stat:
+                    print("stats:", eng.registry.stats_line(stat_names))
+                    next_stat += args.stats_every
         comps = [eng.result(h, timeout=600) for h in handles]
         st = eng.core.pool.stats
         print(f"kv pool: {st['fresh_pages']} pages allocated, "
@@ -208,6 +243,11 @@ def main() -> int:
         ttft = sorted(c.t_first - ts for c, ts in zip(comps, t_submit))
         print(f"ttft: p50 {ttft[len(ttft) // 2] * 1e3:.1f} ms, "
               f"max {ttft[-1] * 1e3:.1f} ms")
+        # TTFT decomposition: queue-wait (submit -> first slot) +
+        # prefill (slot -> first token) — Completion.t_sched
+        qw = sorted(c.t_sched - c.t0 for c in comps)
+        print(f"queue-wait: p50 {qw[len(qw) // 2] * 1e3:.1f} ms, "
+              f"max {qw[-1] * 1e3:.1f} ms")
         eng.shutdown()
     elif args.engine == "continuous":
         eng = ContinuousServingEngine(
@@ -215,7 +255,7 @@ def main() -> int:
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk,
             prefix_cache=not args.no_prefix_cache, mesh=mesh,
-            n_nodes=max(args.tp_shards, 1))
+            n_nodes=max(args.tp_shards, 1), tracer=tracer)
         comps = eng.generate(reqs)
         st = eng.pool.stats
         print(f"kv pool: {st['fresh_pages']} pages allocated, "
@@ -234,6 +274,13 @@ def main() -> int:
     rep = throughput_report(comps, **phase)
     print("throughput:", {k: round(v, 2) if isinstance(v, float) else v
                           for k, v in rep.items()})
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            f.write(eng.registry.snapshot_json())
+        print(f"metrics snapshot -> {args.metrics_json}")
+    if tracer is not None:
+        n = tracer.write_jsonl(args.trace)
+        print(f"trace: {n} events -> {args.trace}")
     return 0
 
 

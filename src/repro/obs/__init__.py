@@ -1,0 +1,36 @@
+"""repro.obs — serving-wide observability substrate.
+
+Lightweight (stdlib-only, jax-free) telemetry the whole serving stack
+reports through, replacing the ad-hoc counters that accumulated in
+PRs 1–5 (``EngineCore.phase_s``, ``decode_gaps_s``, pool stat ints):
+
+* :mod:`repro.obs.metrics` — :class:`MetricsRegistry`: counters,
+  gauges and fixed-bucket histograms with labels, a JSON snapshot API
+  and Prometheus text exposition.  :class:`NullRegistry` is the no-op
+  twin the ``serving_obs.overhead_pct`` bench compares against.
+* :mod:`repro.obs.trace` — :class:`RequestTracer`: per-request
+  lifecycle span events (QUEUED → PREFILLING → DECODING → FINISHED /
+  CANCELLED / FAILED, plus per-chunk prefill / preemption / CoW
+  annotations) stamped from the engine's injected Clock, exported as
+  JSONL keyed by request uid.
+* :mod:`repro.obs.validate` — schema checks for both exports (used by
+  ``tools/check.sh --smoke`` and the tests); also a CLI:
+  ``python -m repro.obs.validate --metrics M.json --trace T.jsonl``.
+
+The metric catalogue, trace schema and overhead budget live in
+``docs/observability.md``.
+"""
+
+from .metrics import (DEFAULT_BUCKETS_MS, Counter, Gauge, Histogram,
+                      MetricsRegistry, NullRegistry)
+from .trace import (NullTracer, RequestTracer, TraceEvent, load_jsonl,
+                    reconstruct_spans, validate_events)
+from .validate import (validate_snapshot, validate_snapshot_file,
+                       validate_trace_file)
+
+__all__ = [
+    "Counter", "DEFAULT_BUCKETS_MS", "Gauge", "Histogram",
+    "MetricsRegistry", "NullRegistry", "NullTracer", "RequestTracer",
+    "TraceEvent", "load_jsonl", "reconstruct_spans", "validate_events",
+    "validate_snapshot", "validate_snapshot_file", "validate_trace_file",
+]

@@ -130,9 +130,27 @@ class AsyncEngine:
         self._alive = True
         self._error: Optional[BaseException] = None
         self._clock0 = self.core.clock.now()
+        # stepper telemetry (core.registry; bound handles — the loop
+        # never touches the registry itself)
+        reg = self.core.registry
+        self._c_submitted = reg.counter(
+            "async.submitted", "requests accepted by submit()").labels()
+        self._c_cancelled = reg.counter(
+            "async.cancelled", "requests torn down by cancel()").labels()
+        self._c_failed = reg.counter(
+            "async.failed", "handles failed (bad request, callback "
+            "error, engine death)").labels()
+        self._g_inbox = reg.gauge(
+            "async.inbox_depth",
+            "submitted-but-not-yet-scheduled requests at the last "
+            "stepper drain").labels()
         self._thread = threading.Thread(
             target=self._step_loop, name="engine-stepper", daemon=True)
         self._thread.start()
+
+    # observability surfaces (owned by the core)
+    registry = property(lambda self: self.core.registry)
+    tracer = property(lambda self: self.core.tracer)
 
     # ------------------------------------------------------------------
     # caller API
@@ -160,6 +178,7 @@ class AsyncEngine:
                 on_token=on_token)
             self._handles[uid] = handle
             self._inbox.append(handle)
+            self._c_submitted.inc()
             self._wake.notify_all()
         return handle
 
@@ -267,11 +286,13 @@ class AsyncEngine:
                         return
                     inbox, self._inbox = self._inbox, []
                     cancels, self._cancels = self._cancels, []
+                    self._g_inbox.set(len(inbox))
                 for handle in cancels:
                     if handle.done:     # finished/failed while queued
                         continue        # for cancel: keep that state
                     if handle._seq is not None:
                         core.cancel(handle._seq)
+                    self._c_cancelled.inc()
                     with self._update:
                         handle.state = RequestState.CANCELLED
                         self._handles.pop(handle.uid, None)
@@ -284,6 +305,13 @@ class AsyncEngine:
                         handle._seq = core.submit(handle.request,
                                                   arrival=now)
                     except ValueError as e:     # bad request, engine fine
+                        # never reached core.submit's QUEUED stamp: give
+                        # the trace a complete (if instant) lifecycle
+                        t = core.clock.now()
+                        core.tracer.event(handle.uid, "QUEUED", t)
+                        core.tracer.event(handle.uid, "FAILED", t,
+                                          error=str(e))
+                        self._c_failed.inc()
                         with self._update:
                             handle.state = RequestState.FAILED
                             handle.error = e
@@ -346,7 +374,10 @@ class AsyncEngine:
             if handle.done:     # cancelled/failed concurrently
                 return
             if handle._seq is not None:
-                self.core.cancel(handle._seq)
+                self.core.cancel(handle._seq, trace_event=None)
+            self.core.tracer.event(handle.uid, "FAILED",
+                                   self.core.clock.now(), error=str(exc))
+            self._c_failed.inc()
             handle.state = RequestState.FAILED
             handle.error = exc
             self._handles.pop(handle.uid, None)
@@ -356,8 +387,13 @@ class AsyncEngine:
         with self._update:
             self._error = exc
             self._alive = False
+            t = self.core.clock.now()
             for h in self._handles.values():
                 if not h.done:
+                    if h._seq is not None:  # queued-in-core: close trace
+                        self.core.tracer.event(h.uid, "FAILED", t,
+                                               error="engine died")
+                    self._c_failed.inc()
                     h.state = RequestState.FAILED
                     h.error = exc
             self._handles.clear()

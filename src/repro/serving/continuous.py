@@ -34,19 +34,23 @@ class ContinuousServingEngine:
                  prefix_cache: bool = True,
                  window_override: Optional[int] = None,
                  mesh=None, policy=None,
-                 seed: int = 0, clock: Optional[Clock] = None) -> None:
+                 seed: int = 0, clock: Optional[Clock] = None,
+                 registry=None, tracer=None) -> None:
         self.core = EngineCore(
             model, params, max_len=max_len, max_running=max_running,
             page_size=page_size, n_pages=n_pages, n_nodes=n_nodes,
             numa=numa, prefill_chunk=prefill_chunk,
             prefix_cache=prefix_cache, window_override=window_override,
-            mesh=mesh, policy=policy, seed=seed, clock=clock)
+            mesh=mesh, policy=policy, seed=seed, clock=clock,
+            registry=registry, tracer=tracer)
         self.decode_gaps_s: List[float] = []
         self.last_phase_s: Dict[str, float] = {}
 
     # engine internals tests/benches reach for, now owned by the core
     model = property(lambda self: self.core.model)
     params = property(lambda self: self.core.params)
+    registry = property(lambda self: self.core.registry)
+    tracer = property(lambda self: self.core.tracer)
     pool = property(lambda self: self.core.pool)
     scheduler = property(lambda self: self.core.scheduler)
     max_len = property(lambda self: self.core.max_len)
@@ -82,8 +86,12 @@ class ContinuousServingEngine:
                 wait = pending[0][0] - (core.clock.now() - clock0)
                 core.clock.sleep(wait)
         self.decode_gaps_s = core.decode_gaps_s
+        # raw phase times — a zero-duration phase (prefill-only run,
+        # virtual clock) passes through as 0.0; ``throughput_report``
+        # now reports 0.0 tok/s for it instead of a clamp-distorted rate
+        phase = core.phase_s
         self.last_phase_s = {
             "wall_s": core.clock.now() - clock0,
-            "prefill_s": core.phase_s["prefill_s"],
-            "decode_s": max(core.phase_s["decode_s"], 1e-9)}
+            "prefill_s": phase["prefill_s"],
+            "decode_s": phase["decode_s"]}
         return sorted(done, key=lambda c: c.uid)

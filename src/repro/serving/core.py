@@ -32,6 +32,8 @@ import jax
 import numpy as np
 
 from ..models.transformer import Model
+from ..obs.metrics import MetricsRegistry, NullRegistry
+from ..obs.trace import NullTracer, RequestTracer
 from .engine import Completion, Request
 from .kv_pool import KVCachePool, KVPoolConfig
 from .runner import ModelRunner, _pad_bucket
@@ -114,7 +116,9 @@ class EngineCore:
                  prefix_cache: bool = True,
                  window_override: Optional[int] = None,
                  mesh=None, policy=None,
-                 seed: int = 0, clock: Optional[Clock] = None) -> None:
+                 seed: int = 0, clock: Optional[Clock] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[RequestTracer] = None) -> None:
         cfg = model.cfg
         self.model = model
         self.params = params
@@ -127,6 +131,12 @@ class EngineCore:
             n_pages = 1 + max_running * (-(-max_len // page_size))
         self.n_pages = n_pages
         self.clock = clock if clock is not None else MonotonicClock()
+        #: metrics registry every layer below reports into (a private
+        #: real registry by default — pass NullRegistry to disable);
+        #: tracer defaults to the no-op twin (opt in via --trace)
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
+        self.tracer = tracer if tracer is not None else NullTracer()
         self._key = jax.random.PRNGKey(seed)
 
         # mesh mode (TP serving): each mesh shard stands in for one
@@ -140,20 +150,72 @@ class EngineCore:
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
             dtype_bytes=np.dtype(cfg.dtype).itemsize, n_nodes=n_nodes,
             numa=numa, n_shards=n_shards), prefix_cache=prefix_cache)
+        self.pool.bind_registry(self.registry)
         self.scheduler = ContinuousScheduler(
             self.pool, max_running=max_running, max_len=max_len,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, registry=self.registry)
         self.runner = ModelRunner(
             model, params, max_running=max_running, max_len=max_len,
             page_size=page_size, n_pages=n_pages,
-            window_override=window_override, mesh=mesh, policy=policy)
+            window_override=window_override, mesh=mesh, policy=policy,
+            registry=self.registry, clock=self.clock)
 
-        self._meta: Dict[int, Dict[str, float]] = {}  # uid -> timing stamps
+        self._meta: Dict[int, Dict[str, object]] = {}  # uid -> timing stamps
         self._t_last_decode: Optional[float] = None
         #: wall gaps between consecutive decode steps since the last
         #: reset (bench: max gap == worst admission stall)
         self.decode_gaps_s: List[float] = []
-        self.phase_s = {"prefill_s": 0.0, "decode_s": 0.0}
+
+        # instruments resolved ONCE here — step() touches only bound
+        # handles, never the registry (docs/observability.md budget)
+        reg = self.registry
+        self._m_phase_prefill = reg.counter(
+            "serving.phase.prefill_s",
+            "wall seconds spent running prefill chunks (run-scoped)")
+        self._m_phase_decode = reg.counter(
+            "serving.phase.decode_s",
+            "wall seconds spent in batched decode (run-scoped)")
+        self._c_prefill_s = self._m_phase_prefill.labels()
+        self._c_decode_s = self._m_phase_decode.labels()
+        self._m_itl = reg.histogram(
+            "serving.decode.itl_ms",
+            "inter-token latency: wall gap between consecutive decode "
+            "steps (run-scoped)")
+        self._h_itl = self._m_itl.labels()
+        self._h_chunk = reg.histogram(
+            "serving.prefill.chunk_ms",
+            "one prefill chunk end-to-end (dispatch + sample)").labels()
+        self._c_steps = reg.counter(
+            "serving.steps", "engine steps, idle included").labels()
+        self._c_tok_prefill = reg.counter(
+            "serving.tokens.prefill", "prompt tokens prefilled").labels()
+        self._c_tok_decode = reg.counter(
+            "serving.tokens.decode",
+            "tokens sampled by batched decode").labels()
+        self._h_occupancy = reg.histogram(
+            "serving.batch.occupancy",
+            "decode-batch occupancy per decoding step",
+            buckets=tuple(float(i) for i in range(1, max_running + 1)),
+            ).labels()
+        # per-(node, shard) pool gauges, sampled after every step; a
+        # page's bytes are split across every shard's head-slice pool,
+        # so each shard sees the same per-node free count.  Skipped
+        # entirely under NullRegistry (no per-step dict build).
+        self._pool_gauges: List[Tuple[object, int]] = []
+        self._g_retained = None
+        if not isinstance(reg, NullRegistry):
+            g_free = reg.gauge(
+                "kv_pool.pages_free",
+                "allocatable pages on this NUMA node as seen by this "
+                "TP shard's head-slice pool")
+            for node in range(max(self.pool.mm.kv_node_count, 1)):
+                for shard in range(n_shards):
+                    self._pool_gauges.append(
+                        (g_free.labels(node=node, shard=shard), node))
+            self._g_retained = reg.gauge(
+                "kv_pool.pages_retained",
+                "refcount-0 prefix pages parked in the retention LRU",
+                ).labels()
 
     # ------------------------------------------------------------------
     def _next_key(self) -> jax.Array:
@@ -176,11 +238,23 @@ class EngineCore:
                 f"request {request.uid}: prompt needs {need} pages; "
                 f"pool only has {self.pool.cfg.max_pages_per_seq}")
 
+    @property
+    def phase_s(self) -> Dict[str, float]:
+        """Thin parity view over the registry-backed phase counters
+        (pre-PR6 callers read ``core.phase_s[...]``).  Zeros under a
+        ``NullRegistry``."""
+        return {"prefill_s": self._m_phase_prefill.value(),
+                "decode_s": self._m_phase_decode.value()}
+
     def reset_run_stats(self) -> None:
-        """Zero the per-run accumulators (phase times, decode gaps)."""
+        """Zero the per-run accumulators (phase counters, ITL histogram,
+        decode gaps) so back-to-back driver runs report cleanly.
+        Cumulative series (scheduler, pool, dispatch) keep counting."""
         self.decode_gaps_s = []
         self._t_last_decode = None
-        self.phase_s = {"prefill_s": 0.0, "decode_s": 0.0}
+        self._m_phase_prefill.reset()
+        self._m_phase_decode.reset()
+        self._m_itl.reset()
 
     def has_work(self) -> bool:
         return self.scheduler.has_work()
@@ -194,15 +268,22 @@ class EngineCore:
         (defaults to the current clock)."""
         self.check_request(request)
         seq = self.scheduler.submit(request, arrival=arrival)
-        self._meta[seq.uid] = {
-            "t0": t0 if t0 is not None else self.clock.now()}
+        t0_abs = t0 if t0 is not None else self.clock.now()
+        self._meta[seq.uid] = {"t0": t0_abs, "arrival": arrival}
+        self.tracer.event(seq.uid, "QUEUED", t0_abs,
+                          prompt_len=len(request.prompt))
         return seq
 
-    def cancel(self, seq: Sequence) -> bool:
+    def cancel(self, seq: Sequence, *,
+               trace_event: Optional[str] = "CANCELLED") -> bool:
         """Tear a sequence down wherever it lives (queued, prefilling
         or decoding): slot and every page reference free immediately.
-        Returns False when it already left the scheduler."""
+        Returns False when it already left the scheduler.
+        ``trace_event`` names the terminal trace event to emit (the
+        async layer passes None when it records FAILED itself)."""
         out = self.scheduler.cancel(seq)
+        if out and trace_event is not None:
+            self.tracer.event(seq.uid, trace_event, self.clock.now())
         self._meta.pop(seq.uid, None)
         return out
 
@@ -223,17 +304,38 @@ class EngineCore:
         copies = self.pool.drain_copies()
         if not copies:
             return
+        if self.tracer.enabled:
+            # attribute cloned destination pages back to owning uids
+            # (only walks block tables on the rare CoW step)
+            t = self.clock.now()
+            dsts = {d for _, d in copies}
+            for seq in self.scheduler.running.values():
+                n = sum(1 for p in self.pool.block_table(seq.uid)
+                        if p in dsts)
+                if n:
+                    self.tracer.event(seq.uid, "COW", t, pages=n)
         src, dst = self.pool.copy_row_plan(
             copies, pad_to_pages=_pad_bucket(len(copies), lo=1))
         self.runner.apply_copy_rows(src, dst)
 
     def _finish(self, seq: Sequence) -> Completion:
         m = self._meta.pop(seq.uid)
+        # t_first_sched lives on the driver's scheduling timeline (the
+        # ``now`` fed to step); both drivers submit with
+        # t0 = clock0 + arrival, so clock0 = t0 - arrival converts it
+        # to the absolute clock the other stamps use
+        if seq.t_first_sched >= 0:
+            t_sched = m["t0"] - m.get("arrival", 0.0) + seq.t_first_sched
+        else:
+            t_sched = m["t0"]
+        self.tracer.event(seq.uid, "FINISHED", m["t1"],
+                          n_tokens=len(seq.generated),
+                          n_preempts=seq.n_preempts)
         return Completion(
             uid=seq.uid, prompt_len=len(seq.request.prompt),
             tokens=list(seq.generated), latency_s=m["t1"] - m["t0"],
             prefill_s=m.get("prefill", 0.0), t0=m["t0"], t1=m["t1"],
-            t_first=m.get("t_first", m["t1"]))
+            t_first=m.get("t_first", m["t1"]), t_sched=t_sched)
 
     # ------------------------------------------------------------------
     def step(self, now: float = 0.0) -> StepResult:
@@ -241,7 +343,15 @@ class EngineCore:
         chunks, run the batched decode, sample, finish.  ``now`` gates
         admission of waiting arrivals (driver-relative seconds)."""
         clock = self.clock
+        tracer = self.tracer
+        self._c_steps.inc()
         plan = self.scheduler.step(now)
+        for seq in plan.preempted:
+            tracer.event(seq.uid, "PREEMPTED", clock.now(),
+                         n_preempts=seq.n_preempts)
+            m = self._meta.get(seq.uid)
+            if m is not None:       # next admission re-opens PREFILLING
+                m.pop("state", None)
         self._apply_copies()
         res = StepResult(n_prefills=len(plan.prefills),
                          n_decodes=len(plan.decodes))
@@ -256,11 +366,16 @@ class EngineCore:
             start = seq.n_prefilled
             n = self.scheduler.chunk_for(seq)
             fresh = start == 0 and n == seq.prefill_target
+            m = self._meta[seq.uid]
+            if m.get("state") != "PREFILLING":  # (re-)entered prefill
+                m["state"] = "PREFILLING"
+                tracer.event(seq.uid, "PREFILLING", t0, start=start,
+                             cached=seq.n_cached_tokens)
+            tracer.event(seq.uid, "PREFILL_CHUNK", t0, start=start, n=n)
             logits = self.runner.prefill_chunk(
                 prompt[start:start + n], slot=seq.slot, start=start,
                 fresh=fresh)
             seq.n_prefilled += n
-            m = self._meta[seq.uid]
             if not seq.is_prefilling:           # final chunk: sample
                 tok = int(np.asarray(sample(
                     logits, seq.request.sampling,
@@ -270,8 +385,12 @@ class EngineCore:
                 # prompt KV is resident now — index it for reuse
                 self.pool.register_prefix(seq.uid, prompt)
                 m.setdefault("t_first", clock.now())
+                m["state"] = "DECODING"
+                tracer.event(seq.uid, "DECODING", clock.now())
             dt = clock.now() - t0
-            self.phase_s["prefill_s"] += dt
+            self._c_prefill_s.inc(dt)
+            self._h_chunk.observe(dt * 1e3)
+            self._c_tok_prefill.inc(n)
             m["prefill"] = m.get("prefill", 0.0) + dt
             if not seq.is_prefilling and seq.is_done(self.max_len):
                 m["t1"] = clock.now()
@@ -298,8 +417,18 @@ class EngineCore:
                     self._meta[seq.uid]["t1"] = clock.now()
             t1 = clock.now()
             if self._t_last_decode is not None:
-                self.decode_gaps_s.append(t1 - self._t_last_decode)
+                gap = t1 - self._t_last_decode
+                self.decode_gaps_s.append(gap)
+                self._h_itl.observe(gap * 1e3)
             self._t_last_decode = t1
-            self.phase_s["decode_s"] += t1 - t0
+            self._c_decode_s.inc(t1 - t0)
+            self._c_tok_decode.inc(len(plan.decodes))
+            self._h_occupancy.observe(float(len(plan.decodes)))
+
+        if self._pool_gauges:
+            free = self.pool.free_pages_by_node()
+            for g, node in self._pool_gauges:
+                g.set(free.get(node, 0))
+            self._g_retained.set(self.pool.n_retained())
 
         return res

@@ -55,6 +55,10 @@ class Completion:
     #: absolute stamp of the FIRST generated token (TTFT = t_first - t0;
     #: the serving_async bench compares engines on it)
     t_first: float = 0.0
+    #: absolute stamp of FIRST scheduling (slot grant): TTFT decomposes
+    #: into queue-wait (t_sched - t0) + prefill (t_first - t_sched).
+    #: The bucket engine admits instantly, so it stamps t_sched = t0.
+    t_sched: float = 0.0
 
 
 class ServingEngine:
@@ -104,7 +108,7 @@ class ServingEngine:
         #: ``throughput_report(comps, **engine.last_phase_s)``
         wall = time.perf_counter() - wall0
         self.last_phase_s = {"wall_s": wall, "prefill_s": prefill_total,
-                             "decode_s": max(wall - prefill_total, 1e-9)}
+                             "decode_s": max(wall - prefill_total, 0.0)}
         return sorted(out, key=lambda c: c.uid)
 
     def _run_bucket(self, bucket: List[Request]) -> List[Completion]:
@@ -151,7 +155,7 @@ class ServingEngine:
         return [Completion(uid=r.uid, prompt_len=plen,
                            tokens=generated[b], latency_s=t1 - t0,
                            prefill_s=t_prefill, t0=t0, t1=t1,
-                           t_first=t_first)
+                           t_first=t_first, t_sched=t0)
                 for b, r in enumerate(bucket)]
 
 
@@ -186,12 +190,17 @@ def throughput_report(completions: Sequence[Completion], *,
         else:   # stamp-less completions are per-request measurements
             prefill_s = sum(c.prefill_s for c in completions)
     if decode_s is None:
-        decode_s = max(wall_s - prefill_s, 1e-9)
+        decode_s = max(wall_s - prefill_s, 0.0)
+    # a zero-duration phase reports 0.0 tok/s EXPLICITLY: the old
+    # max(dt, 1e-9) clamp turned prefill-only runs (and virtual-clock
+    # tests, where a phase can legitimately take no time) into
+    # astronomical rates instead of admitting "no time was measured"
+    prompt_total = sum(c.prompt_len for c in completions)
     return {
         "requests": len(completions),
         "new_tokens": total_new,
         "wall_s": wall_s,
-        "decode_tok_per_s": total_new / max(decode_s, 1e-9),
-        "prefill_tok_per_s": (sum(c.prompt_len for c in completions)
-                              / max(prefill_s, 1e-9)),
+        "decode_tok_per_s": total_new / decode_s if decode_s > 0 else 0.0,
+        "prefill_tok_per_s": (prompt_total / prefill_s
+                              if prefill_s > 0 else 0.0),
     }

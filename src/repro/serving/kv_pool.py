@@ -269,6 +269,41 @@ class KVCachePool:
             "retention_hits": 0,   # refcount-0 pages revived by sharing
             "retained_evictions": 0,   # retained pages reclaimed when dry
         }
+        #: optional registry-backed twins of ``stats`` (``bind_registry``)
+        self._stat_counters: Dict[str, object] = {}
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    #: stats key -> metric name (docs/observability.md catalogue)
+    STAT_METRICS: Dict[str, str] = {
+        "fresh_pages": "kv_pool.pages_fresh",
+        "shared_pages": "kv_pool.pages_shared",
+        "cow_copies": "kv_pool.cow_copies",
+        "cached_tokens": "prefix_cache.hit_tokens",
+        "retention_hits": "kv_pool.retention_hits",
+        "retained_evictions": "kv_pool.retained_evictions",
+    }
+
+    def bind_registry(self, registry) -> None:
+        """Mirror every ``stats`` increment into ``registry`` counters
+        (the legacy ``stats`` ints stay authoritative as thin views —
+        benches reset them per run without touching the registry)."""
+        self._stat_counters = {
+            key: registry.counter(
+                name, f"KVCachePool stats[{key!r}] (cumulative)").labels()
+            for key, name in self.STAT_METRICS.items()}
+
+    def _stat(self, key: str, n: int = 1) -> None:
+        self.stats[key] += n
+        c = self._stat_counters.get(key)
+        if c is not None:
+            c.inc(n)
+
+    def free_pages_by_node(self) -> Dict[int, int]:
+        """Truly-free pages per node (retained pages excluded — they
+        are reclaimable but their bytes still hold cached prefixes)."""
+        return {n: len(v) for n, v in self._free.items()}
 
     # ------------------------------------------------------------------
     def n_free(self) -> int:
@@ -301,7 +336,7 @@ class KVCachePool:
             pid, _ = self._retained.popitem(last=False)   # LRU order
             if self.prefix is not None:
                 self.prefix.forget(pid)
-            self.stats["retained_evictions"] += 1
+            self._stat("retained_evictions")
             return pid
         raise RuntimeError("KV pool exhausted")
 
@@ -328,7 +363,7 @@ class KVCachePool:
         for _ in range(need):
             pid = self._take_page(node_hint)
             self._ref[pid] = 1
-            self.stats["fresh_pages"] += 1
+            self._stat("fresh_pages")
             pages.append(pid)
         return True
 
@@ -385,11 +420,11 @@ class KVCachePool:
             elif pid != 0 and pid in self._retained:
                 del self._retained[pid]
                 self._ref[pid] = 1
-                self.stats["retention_hits"] += 1
+                self._stat("retention_hits")
             else:
                 raise ValueError(f"page {pid} is not live (cannot share)")
             table.append(pid)
-            self.stats["shared_pages"] += 1
+            self._stat("shared_pages")
 
     def match_prefix(self, tokens: Sequence[int]) -> PrefixMatch:
         """Longest reusable resident prefix of a prompt.
@@ -419,13 +454,13 @@ class KVCachePool:
         if match.cow_src is not None:
             dst = self._take_page(node_hint)
             self._ref[dst] = 1
-            self.stats["fresh_pages"] += 1
-            self.stats["cow_copies"] += 1
+            self._stat("fresh_pages")
+            self._stat("cow_copies")
             # a divergence inside the FIRST block matches no full page,
             # so the clone may be the table's very first entry
             self._pages.setdefault(uid, []).append(dst)
             self.pending_copies.append((match.cow_src, dst))
-        self.stats["cached_tokens"] += match.n_tokens
+        self._stat("cached_tokens", match.n_tokens)
         return True
 
     def register_prefix(self, uid: int, tokens: Sequence[int]) -> None:
@@ -452,8 +487,8 @@ class KVCachePool:
             return False
         dst = self._take_page(node_hint)
         self._ref[dst] = 1
-        self.stats["fresh_pages"] += 1
-        self.stats["cow_copies"] += 1
+        self._stat("fresh_pages")
+        self._stat("cow_copies")
         self._ref[pid] -= 1
         table[li] = dst
         self.pending_copies.append((pid, dst))

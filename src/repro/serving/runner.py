@@ -38,6 +38,7 @@ runner/sampling boundary.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -81,7 +82,9 @@ class ModelRunner:
                  max_len: int, page_size: int, n_pages: int,
                  window_override: Optional[int] = None,
                  mesh: Optional[Any] = None,
-                 policy: Optional[Any] = None) -> None:
+                 policy: Optional[Any] = None,
+                 registry: Optional[Any] = None,
+                 clock: Optional[Any] = None) -> None:
         self.model = model
         self.params = params
         self.max_running = max_running
@@ -94,6 +97,24 @@ class ModelRunner:
         self.tp_axis = "model"
         self.tp_shards = (int(mesh.shape.get(self.tp_axis, 1))
                           if mesh is not None else 1)
+        # observability: per-call dispatch time (enqueue-to-return of
+        # the compiled call — device completion is owned by whoever
+        # blocks; under TP one shard_map dispatch drives all S shards,
+        # so series are labelled by shard count).  Instruments resolve
+        # once; time comes from the engine's injected clock so tests
+        # under a VirtualClock record zeros deterministically.
+        self._now = clock.now if clock is not None else time.perf_counter
+        self._h_decode = self._h_prefill = None
+        if registry is not None:
+            shards = str(self.tp_shards)
+            self._h_decode = registry.histogram(
+                "runner.decode.dispatch_ms",
+                "batched decode dispatch wall per call").labels(
+                    shards=shards)
+            self._h_prefill = registry.histogram(
+                "runner.prefill.dispatch_ms",
+                "prefill-chunk dispatch wall per call").labels(
+                    shards=shards)
         self.cache = model.init_cache(max_running, max_len,
                                       page_size=page_size, n_pages=n_pages)
         #: (padded chunk len, ctx page bucket) -> compiled prefill;
@@ -249,6 +270,7 @@ class ModelRunner:
         toks = np.zeros((1, padded), np.int32)
         toks[0, :n] = tokens
         batch = {"tokens": jnp.asarray(toks)}
+        t0 = self._now() if self._h_prefill is not None else 0.0
         if fresh:
             logits, self.cache = self._prefill_fn(padded, 0)(
                 self.params, batch, self.cache,
@@ -261,14 +283,19 @@ class ModelRunner:
                 self.params, batch, self.cache,
                 jnp.asarray(slot, jnp.int32), jnp.asarray(n, jnp.int32),
                 jnp.asarray(start, jnp.int32))
+        if self._h_prefill is not None:
+            self._h_prefill.observe((self._now() - t0) * 1e3)
         return logits
 
     def decode(self, fed: np.ndarray, pos: np.ndarray) -> jax.Array:
         """One batched decode step: ``fed`` (max_running, 1) tokens,
         ``pos`` (max_running,) absolute fed-token positions (-1 = idle
         slot, masked + scratch-paged).  Returns (max_running, 1, V)."""
+        t0 = self._now() if self._h_decode is not None else 0.0
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(fed), jnp.asarray(pos))
+        if self._h_decode is not None:
+            self._h_decode.observe((self._now() - t0) * 1e3)
         return logits
 
 

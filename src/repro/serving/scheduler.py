@@ -118,7 +118,8 @@ class Schedule:
 class ContinuousScheduler:
     def __init__(self, pool: KVCachePool, *, max_running: int,
                  max_len: int, policy: str = "fcfs",
-                 prefill_chunk: Optional[int] = None) -> None:
+                 prefill_chunk: Optional[int] = None,
+                 registry=None) -> None:
         if policy != "fcfs":
             raise ValueError(f"unknown policy {policy!r}")
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -132,6 +133,23 @@ class ContinuousScheduler:
         self.running: Dict[int, Sequence] = {}      # slot -> Sequence
         self._free_slots = list(range(max_running - 1, -1, -1))
         self.n_preemptions = 0
+        # observability (optional; instruments resolved once — the
+        # scheduler stays jax-free, repro.obs is stdlib-only)
+        self._m_preempt = self._m_admit = None
+        self._g_queue = self._g_running = None
+        if registry is not None:
+            self._m_preempt = registry.counter(
+                "scheduler.preemptions",
+                "recompute-style preemptions (pool pressure)").labels()
+            self._m_admit = registry.counter(
+                "scheduler.admissions",
+                "sequences admitted into the running batch").labels()
+            self._g_queue = registry.gauge(
+                "scheduler.queue_depth",
+                "waiting sequences after the last step").labels()
+            self._g_running = registry.gauge(
+                "scheduler.running",
+                "running-batch occupancy after the last step").labels()
 
     # ------------------------------------------------------------------
     def submit(self, request: Request, arrival: float = 0.0) -> Sequence:
@@ -242,6 +260,8 @@ class ContinuousScheduler:
             seq.slot = slot
             if seq.t_first_sched < 0:
                 seq.t_first_sched = now
+            if self._m_admit is not None:
+                self._m_admit.inc()
             self.running[slot] = seq
 
         # 3. every sequence whose prompt KV is not fully resident runs
@@ -275,6 +295,9 @@ class ContinuousScheduler:
 
         sched.decodes = [self.running[s] for s in sorted(self.running)
                          if self.running[s] not in sched.prefills]
+        if self._g_queue is not None:
+            self._g_queue.set(len(self.waiting))
+            self._g_running.set(len(self.running))
         return sched
 
     # ------------------------------------------------------------------
@@ -287,6 +310,8 @@ class ContinuousScheduler:
 
     def _preempt(self, seq: Sequence) -> None:
         self.n_preemptions += 1
+        if self._m_preempt is not None:
+            self._m_preempt.inc()
         seq.n_preempts += 1
         del self.running[seq.slot]
         self._free_slots.append(seq.slot)

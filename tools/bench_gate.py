@@ -1,10 +1,10 @@
 """Bench-regression gate (``tools/check.sh --bench``).
 
 Runs the key ``benchmarks/serving_bench.py`` sections, writes
-``BENCH_PR5.json`` at the repo root, and compares the tracked metrics
+``BENCH_PR6.json`` at the repo root, and compares the tracked metrics
 against a baseline read *before* the write: the committed/previous
-``BENCH_PR5.json`` itself when present, else the newest other
-``BENCH_*.json`` (e.g. the PR 4 baseline).  Any metric that regresses
+``BENCH_PR6.json`` itself when present, else the newest other
+``BENCH_*.json`` (e.g. the PR 5 baseline).  Any metric that regresses
 more than the threshold (default 20%, knob: ``BENCH_REGRESSION_PCT``
 env var or ``--threshold``) fails the gate with a nonzero exit.
 
@@ -25,6 +25,11 @@ Tracked metrics (direction-aware):
                           the forced-host-device mesh — the TP engine
                           must not rot (absolute numbers are fake-
                           device timings; the trend is what's gated)
+  serving_obs_overhead_pct
+                          serving_obs instrumented-vs-noop decode
+                          tok/s overhead in percent (v) — the
+                          observability layer's <= 3% budget
+                          (docs/observability.md)
 
 A metric present in the current run but NOT in the baseline (a freshly
 landed bench, e.g. the first ``serving_tp.*`` run) is reported as
@@ -34,7 +39,7 @@ next baseline.  Metrics that vanished from the current run are
 reported as ``dropped`` the same way.
 
 Usage:
-  python tools/bench_gate.py run [--out BENCH_PR5.json] [--threshold 20]
+  python tools/bench_gate.py run [--out BENCH_PR6.json] [--threshold 20]
   python tools/bench_gate.py compare CURRENT.json BASELINE.json \
       [--threshold 20]
 
@@ -63,6 +68,7 @@ METRICS: Dict[str, Tuple[str, str]] = {
     "decode_flatness": ("serving_scan_escape.decode_flatness", "lower"),
     "async_ttft_p50_ms": ("serving_async.ttft_p50_ms", "lower"),
     "tp_decode_tok_per_s": ("serving_tp.decode_toks_per_s.s2", "higher"),
+    "serving_obs_overhead_pct": ("serving_obs.overhead_pct", "lower"),
 }
 
 
@@ -78,6 +84,7 @@ def collect() -> Dict[str, object]:
     rows += serving_bench.serving_cb_rows()
     rows += serving_bench.serving_chunk_rows()
     rows += serving_bench.serving_async_rows()
+    rows += serving_bench.serving_obs_rows()
     rows += serving_bench.serving_scan_escape_rows()
     rows += serving_bench.serving_tp_rows()
     by_name = {name: derived for name, _us, derived in rows}
@@ -172,7 +179,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     run_p = sub.add_parser("run", help="run benches, write + compare")
-    run_p.add_argument("--out", default="BENCH_PR5.json")
+    run_p.add_argument("--out", default="BENCH_PR6.json")
     run_p.add_argument("--threshold", type=float, default=None,
                        help="regression threshold in percent")
     cmp_p = sub.add_parser("compare", help="compare two reports")

@@ -12,7 +12,7 @@
 #                             # warning when ruff is not installed)
 #   tools/check.sh --bench    # bench-regression gate: runs the key
 #                             # serving_bench sections, writes
-#                             # BENCH_PR5.json, fails on a >20%
+#                             # BENCH_PR6.json, fails on a >20%
 #                             # regression vs the newest BENCH_*.json
 #                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
@@ -114,4 +114,14 @@ echo "== serving smoke: tensor-parallel paged engine (2 shards) =="
 python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \
     --tp-shards 2 --max-new 8 --max-running 4 --page-size 8 \
     --warmup-steps 0
+echo "== serving smoke: observability exports (async, 2 shards) =="
+OBS_TMP="$(mktemp -d)"
+trap 'rm -rf "$OBS_TMP"' EXIT
+python -m repro.launch.serve --arch qwen3-1.7b --engine async \
+    --tp-shards 2 --max-new 8 --max-running 4 --page-size 8 \
+    --prefill-chunk 16 --warmup-steps 0 \
+    --metrics-json "$OBS_TMP/metrics.json" --trace "$OBS_TMP/trace.jsonl"
+python -m repro.obs.validate --metrics "$OBS_TMP/metrics.json" \
+    --trace "$OBS_TMP/trace.jsonl" \
+    --require-gauge kv_pool.pages_free:node,shard
 echo "check.sh: OK"
