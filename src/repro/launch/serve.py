@@ -18,6 +18,16 @@ metrics registry snapshot on exit, ``--trace PATH`` records per-request
 trace spans as JSONL, ``--stats-every SECS`` prints a periodic metrics
 line while the async engine serves (``docs/observability.md``).
 
+Network serving (``docs/serving.md`` "HTTP serving front-end"):
+``--http`` serves ``/v1/completions`` (SSE streaming) + ``/healthz`` +
+``/metrics`` instead of running the batch demo.  ``--replicas 0``
+(default) serves the in-process ``AsyncEngine``; ``--replicas N``
+spawns N ``repro.serving.worker`` subprocesses under a supervisor and
+routes across them with prefix-affinity placement
+(``repro.serving.router``).  ``--port 0`` picks a free port;
+``--port-file PATH`` writes the bound port for scripts
+(``tools/check.sh --smoke``).
+
 Examples:
     python -m repro.launch.serve --arch gemma3-1b --max-new 24
     python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \\
@@ -26,11 +36,97 @@ Examples:
         --interactive --warmup-steps 80
     python -m repro.launch.serve --arch recurrentgemma-2b \\
         --prompt "the scheduler binds" --temperature 0.7
+    python -m repro.launch.serve --arch tiny --engine async --http \\
+        --replicas 2 --port 8080
 """
 
 import argparse
 import dataclasses
 import sys
+
+
+def stream_interactive(eng, handle, write, *, decode=None,
+                       timeout: float = 300.0) -> str:
+    """Stream one interactive request through ``write``; returns
+    ``"finished"`` / ``"failed"`` / ``"cancelled"``.
+
+    A handle that lands FAILED raises ``AsyncEngineError`` out of
+    ``stream()`` with the real error chained as ``__cause__`` — the
+    interactive loop used to crash on it and drop the reason; here the
+    chained cause is printed and the session keeps going
+    (``tests/test_async_serving.py``).
+    """
+    from ..serving.async_engine import AsyncEngineError, RequestState
+    decode = decode if decode is not None else str
+    try:
+        for t in eng.stream(handle, timeout=timeout):
+            write(decode(t))
+    except AsyncEngineError as e:
+        cause = e.__cause__
+        write(f"\n[request failed: {e}"
+              + (f" — caused by {type(cause).__name__}: {cause}"
+                 if cause is not None else "") + "]\n")
+        return "failed"
+    except TimeoutError as e:
+        eng.cancel(handle)
+        write(f"\n[request timed out: {e}]\n")
+        return "failed"
+    if handle.state is RequestState.CANCELLED:
+        write("\n[request cancelled]\n")
+        return "cancelled"
+    write("\n")
+    return "finished"
+
+
+def _serve_http(fe, *, port_file=None, supervisor=None) -> int:
+    """Run a started frontend until SIGTERM/SIGINT, then drain the
+    backend (and, behind a router, the worker fleet)."""
+    import signal
+    import threading
+    if port_file:
+        with open(port_file, "w") as f:
+            f.write(str(fe.port))
+    print(f"serving http on {fe.url} "
+          "(/v1/completions /healthz /metrics)", flush=True)
+    stop = threading.Event()
+    for s in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(s, lambda *_: stop.set())
+    stop.wait()
+    fe.close(shutdown_backend=True)
+    if supervisor is not None:
+        supervisor.shutdown()
+    print("http serving stopped", flush=True)
+    return 0
+
+
+def _serve_replicated(args) -> int:
+    """``--http --replicas N``: front-door process holds only the
+    supervisor + router + frontend — no model is built here; each
+    worker subprocess builds its own engine + page pool."""
+    from ..data.tokenizer import ByteTokenizer
+    from ..serving.http import HttpFrontend
+    from ..serving.router import Router
+    from ..serving.supervisor import Supervisor
+    worker_args = ["--arch", args.arch, "--max-running",
+                   str(args.max_running), "--page-size",
+                   str(args.page_size), "--seed", "0"]
+    if args.n_pages is not None:
+        worker_args += ["--n-pages", str(args.n_pages)]
+    if args.prefill_chunk is not None:
+        worker_args += ["--prefill-chunk", str(args.prefill_chunk)]
+    if args.no_prefix_cache:
+        worker_args += ["--no-prefix-cache"]
+    sup = Supervisor(args.replicas, worker_args, host=args.host)
+    print(f"starting {args.replicas} engine workers "
+          f"(--arch {args.arch}) ...", flush=True)
+    clients = sup.start()
+    router = Router(clients, page_size=args.page_size)
+    sup.on_death = lambda rid, rc: router.mark_dead(rid)
+    for rid, c in sorted(clients.items()):
+        print(f"  worker {rid}: {c.describe()}", flush=True)
+    fe = HttpFrontend(router, tokenizer=ByteTokenizer(), host=args.host,
+                      port=args.port).start()
+    return _serve_http(fe, port_file=args.port_file, supervisor=sup)
 
 
 def _print_shard_stats(pool) -> None:
@@ -94,12 +190,39 @@ def main() -> int:
                     metavar="SECS",
                     help="async engine: print a one-line metrics "
                          "summary every SECS seconds while serving")
+    ap.add_argument("--http", action="store_true",
+                    help="serve /v1/completions + /healthz + /metrics "
+                         "over HTTP instead of the batch demo "
+                         "(async engine)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--http: bind address")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--http: bind port (0 picks a free one)")
+    ap.add_argument("--port-file", metavar="PATH", default=None,
+                    help="--http: write the bound port here (scripts)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="--http: engine-worker subprocesses behind a "
+                         "prefix-affinity router (0 = serve the "
+                         "in-process engine)")
     args = ap.parse_args()
 
     if args.engine == "bucket" and (args.metrics_json or args.trace
                                     or args.stats_every):
         ap.error("--metrics-json/--trace/--stats-every report the paged "
                  "serving stack; use --engine continuous or async")
+    if args.replicas and not args.http:
+        ap.error("--replicas needs --http")
+    if args.http:
+        if args.engine != "async":
+            ap.error("--http serves through the async engine; add "
+                     "--engine async")
+        if args.interactive:
+            ap.error("--http and --interactive are exclusive")
+        if args.replicas:
+            if args.tp_shards > 1:
+                ap.error("--replicas spawns single-shard workers; "
+                         "--tp-shards applies to --replicas 0")
+            return _serve_replicated(args)
 
     import os
     import time
@@ -125,13 +248,21 @@ def main() -> int:
     from ..training.loop import train
     from ..training.optimizer import AdamWConfig
 
-    if args.arch not in list_archs():
-        ap.error(f"unknown arch; choose from {list_archs()}")
-    cfg = reduced_config(get_config(args.arch))
-    cfg = dataclasses.replace(cfg, dtype=jnp.float32, capacity_factor=4.0,
-                              vocab_size=max(cfg.vocab_size, 259))
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    if args.arch == "tiny":
+        # the benchmark suite's bench-tiny model: instant to build, the
+        # smoke-test arch for --http
+        from ..serving.worker import build_tiny
+        model, params = build_tiny()
+        cfg = model.cfg
+    elif args.arch not in list_archs():
+        ap.error(f"unknown arch; choose 'tiny' or one of {list_archs()}")
+    else:
+        cfg = reduced_config(get_config(args.arch))
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32,
+                                  capacity_factor=4.0,
+                                  vocab_size=max(cfg.vocab_size, 259))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
     tok = ByteTokenizer()
     print(f"arch={cfg.name} (reduced, {cfg.param_count() / 1e6:.1f}M)")
 
@@ -197,11 +328,16 @@ def main() -> int:
     if args.engine == "async":
         eng = AsyncEngine(
             model, params, max_len=max(max_len, 256 + args.max_new)
-            if args.interactive else max_len,
+            if (args.interactive or args.http) else max_len,
             max_running=args.max_running, page_size=args.page_size,
             n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
             prefix_cache=not args.no_prefix_cache, mesh=mesh,
             n_nodes=max(args.tp_shards, 1), tracer=tracer)
+        if args.http:        # --replicas 0: in-process engine over HTTP
+            from ..serving.http import HttpFrontend
+            fe = HttpFrontend(eng, tokenizer=tok, host=args.host,
+                              port=args.port).start()
+            return _serve_http(fe, port_file=args.port_file)
         if args.interactive:
             print("interactive async demo — one prompt per line, "
                   "empty line or EOF quits")
@@ -215,9 +351,10 @@ def main() -> int:
                 handle = eng.submit(Request(uid=0,
                                             prompt=tok.encode(line),
                                             sampling=sp))
-                for t in eng.stream(handle, timeout=300):
-                    print(tok.decode([t]), end="", flush=True)
-                print()
+                stream_interactive(
+                    eng, handle,
+                    lambda s: print(s, end="", flush=True),
+                    decode=lambda t: tok.decode([t]), timeout=300)
             eng.shutdown()
             return 0
         t_submit = []

@@ -15,12 +15,14 @@ Two documents leave the serving stack (``docs/observability.md``):
 The module doubles as the smoke gate's CLI::
 
     python -m repro.obs.validate --metrics M.json --trace T.jsonl \
-        [--require-gauge kv_pool.pages_free:node,shard]
+        [--require-gauge kv_pool.pages_free:node,shard] \
+        [--require-counter router.requests:replica]
 
-``--require-gauge NAME[:label,label]`` additionally asserts the
-snapshot contains that gauge with the given label keys — how
-``tools/check.sh --smoke`` pins the per-(node, shard) pool gauges of a
-``--tp-shards 2`` run.  Exit 0 = all documents valid.
+``--require-gauge`` / ``--require-counter`` (``NAME[:label,label]``)
+additionally assert the snapshot contains that series with the given
+label keys — how ``tools/check.sh --smoke`` pins the per-(node, shard)
+pool gauges of a ``--tp-shards 2`` run and the per-replica ``router.*``
+series of a ``--http --replicas 2`` run.  Exit 0 = all documents valid.
 """
 
 from __future__ import annotations
@@ -105,17 +107,28 @@ def validate_trace_file(path: str,
     return validate_events(events, require_terminal=require_terminal)
 
 
-def require_gauge(doc: Dict[str, object], name: str,
-                  label_keys: List[str]) -> List[str]:
-    """Assert the snapshot has >= 1 ``name`` gauge series carrying
-    every label key in ``label_keys``."""
-    hits = [g for g in doc.get("gauges", [])
+def _require_series(doc: Dict[str, object], kind: str, name: str,
+                    label_keys: List[str]) -> List[str]:
+    hits = [g for g in doc.get(kind, [])
             if g.get("name") == name
             and all(k in g.get("labels", {}) for k in label_keys)]
     if not hits:
         want = name + (":" + ",".join(label_keys) if label_keys else "")
-        return [f"snapshot has no gauge {want}"]
+        return [f"snapshot has no {kind[:-1]} {want}"]
     return []
+
+
+def require_gauge(doc: Dict[str, object], name: str,
+                  label_keys: List[str]) -> List[str]:
+    """Assert the snapshot has >= 1 ``name`` gauge series carrying
+    every label key in ``label_keys``."""
+    return _require_series(doc, "gauges", name, label_keys)
+
+
+def require_counter(doc: Dict[str, object], name: str,
+                    label_keys: List[str]) -> List[str]:
+    """Counter twin of :func:`require_gauge`."""
+    return _require_series(doc, "counters", name, label_keys)
 
 
 def main(argv=None) -> int:
@@ -126,6 +139,10 @@ def main(argv=None) -> int:
                     metavar="NAME[:label,label]",
                     help="snapshot must contain this gauge (with these "
                          "label keys)")
+    ap.add_argument("--require-counter", action="append", default=[],
+                    metavar="NAME[:label,label]",
+                    help="snapshot must contain this counter (with "
+                         "these label keys)")
     args = ap.parse_args(argv)
     if not args.metrics and not args.trace:
         ap.error("nothing to validate: pass --metrics and/or --trace")
@@ -133,12 +150,16 @@ def main(argv=None) -> int:
     problems: List[str] = []
     if args.metrics:
         problems += validate_snapshot_file(args.metrics)
-        if not problems and args.require_gauge:
+        if not problems and (args.require_gauge or args.require_counter):
             with open(args.metrics) as f:
                 doc = json.load(f)
             for spec in args.require_gauge:
                 name, _, keys = spec.partition(":")
                 problems += require_gauge(
+                    doc, name, [k for k in keys.split(",") if k])
+            for spec in args.require_counter:
+                name, _, keys = spec.partition(":")
+                problems += require_counter(
                     doc, name, [k for k in keys.split(",") if k])
     if args.trace:
         problems += validate_trace_file(args.trace)

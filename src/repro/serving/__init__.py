@@ -23,6 +23,14 @@ Memory and policy under the hood: paged KV-cache pool (``kv_pool``,
 refcounted prefix caching + retention LRU + copy-on-write) and the
 continuous-batching scheduler (``scheduler``: per-step join/evict,
 chunked prefill, preemption under memory pressure).
+
+The network edge (``docs/serving.md`` "HTTP serving front-end"):
+:class:`~repro.serving.http.HttpFrontend` serves ``/v1/completions``
+(SSE streaming) + ``/healthz`` + ``/metrics`` over any engine-like
+backend, and :class:`~repro.serving.router.Router` is such a backend
+fanning out to N worker subprocesses (``repro.serving.worker``, spawned
+by :class:`~repro.serving.supervisor.Supervisor`) with prefix-affinity
+placement and worker-death failover.
 """
 
 from .async_engine import (AsyncEngine, AsyncEngineError, CancelledError,
@@ -32,18 +40,25 @@ from .core import (Clock, EngineCore, MonotonicClock, StepResult,
                    VirtualClock)
 from .engine import (Completion, Request, ServingEngine,
                      throughput_report)
-from .kv_pool import KVCachePool, KVPoolConfig, PrefixCache, PrefixMatch
+from .http import HttpFrontend
+from .kv_pool import (KVCachePool, KVPoolConfig, PrefixCache, PrefixMatch,
+                      prefix_chain_key)
+from .router import (AffinityRing, HttpWorkerClient, NoReplicasError,
+                     Router, RouterError, RouterHandle, WorkerDiedError)
 from .runner import BucketRunner, ModelRunner
 from .sampler import SamplingParams, sample, sample_grouped
 from .scheduler import ContinuousScheduler, Schedule, Sequence
+from .supervisor import Supervisor, WorkerStartupError
 
 __all__ = [
-    "AsyncEngine", "AsyncEngineError", "BucketRunner", "CancelledError",
-    "Clock", "Completion", "ContinuousScheduler",
-    "ContinuousServingEngine", "EngineCore", "KVCachePool", "KVPoolConfig",
-    "ModelRunner", "MonotonicClock", "PollResult", "PrefixCache",
-    "PrefixMatch", "Request", "RequestHandle", "RequestState",
-    "SamplingParams", "Schedule", "Sequence", "ServingEngine",
-    "StepResult", "VirtualClock", "sample", "sample_grouped",
-    "throughput_report",
+    "AffinityRing", "AsyncEngine", "AsyncEngineError", "BucketRunner",
+    "CancelledError", "Clock", "Completion", "ContinuousScheduler",
+    "ContinuousServingEngine", "EngineCore", "HttpFrontend",
+    "HttpWorkerClient", "KVCachePool", "KVPoolConfig", "ModelRunner",
+    "MonotonicClock", "NoReplicasError", "PollResult", "PrefixCache",
+    "PrefixMatch", "Request", "RequestHandle", "RequestState", "Router",
+    "RouterError", "RouterHandle", "SamplingParams", "Schedule",
+    "Sequence", "ServingEngine", "StepResult", "Supervisor",
+    "VirtualClock", "WorkerDiedError", "WorkerStartupError", "sample",
+    "sample_grouped", "throughput_report", "prefix_chain_key",
 ]

@@ -1,0 +1,354 @@
+"""HTTP serving front-end: OpenAI-style completions over the engine seam.
+
+The network edge of the serving stack (``docs/serving.md`` "HTTP
+serving front-end").  Dependency-free by design — stdlib
+``http.server`` threads, matching the repo's no-deps discipline — and
+**backend-agnostic**: anything exposing the ``AsyncEngine`` caller
+surface (``submit(request, on_token=)`` / ``stream`` / ``result`` /
+``cancel`` / ``registry`` / ``shutdown``) can sit behind it.  In
+practice that is either a local :class:`~repro.serving.async_engine.
+AsyncEngine` (single-process serving) or a
+:class:`~repro.serving.router.Router` fanning out to engine-worker
+subprocesses (``launch/serve.py --http --replicas N``).
+
+Endpoints:
+
+``POST /v1/completions``
+    JSON body -> :class:`~repro.serving.engine.Request`.  ``prompt``
+    is a string (encoded with the frontend's tokenizer) or a raw token
+    id list; ``max_tokens`` / ``temperature`` / ``top_k`` / ``eos_id``
+    map onto :class:`~repro.serving.sampler.SamplingParams`.  With
+    ``"stream": true`` the response is Server-Sent Events: one
+    ``data:`` frame per sampled token (driven by the backend's token
+    feed, so frames leave as the engine samples), a ``done`` frame with
+    usage/timing, then ``data: [DONE]``.  Without it, the handler
+    blocks on ``result()`` and returns one JSON completion document.
+
+``GET /healthz``
+    Liveness (and, behind a router, per-replica health).
+
+``GET /metrics`` / ``GET /metrics.json``
+    The backend registry's Prometheus text exposition / JSON snapshot
+    (``repro.obs`` — the snapshot validates under
+    ``repro.obs.validate``).
+
+Failure semantics: a client that disconnects mid-stream triggers
+``backend.cancel(handle)`` on the next frame write, so an abandoned
+stream frees its engine slot and KV pages (asserted via ``/metrics``
+in ``tests/test_http_serving.py``).  A FAILED handle surfaces as an
+SSE ``error`` frame (streaming) or an HTTP 500 JSON error document
+(non-streaming), both carrying the chained cause.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, List, Optional, Tuple
+
+from .engine import Request
+from .sampler import SamplingParams
+
+#: terminal SSE frame — after it the stream holds nothing more
+SSE_DONE = b"data: [DONE]\n\n"
+
+
+def sse_frame(obj: Any) -> bytes:
+    """One SSE ``data:`` frame.  Compact separators + sorted keys keep
+    the bytes deterministic, so the wire-parity test can byte-compare
+    frames against locally rebuilt ones."""
+    body = json.dumps(obj, separators=(",", ":"), sort_keys=True)
+    return b"data: " + body.encode("utf-8") + b"\n\n"
+
+
+def error_payload(exc: BaseException) -> Dict[str, Any]:
+    """JSON error document carrying the exception AND its chained
+    cause (worker death, bad request, ...) over the wire."""
+    cause = exc.__cause__
+    return {"error": {
+        "type": type(exc).__name__,
+        "message": str(exc),
+        "cause": (f"{type(cause).__name__}: {cause}"
+                  if cause is not None else None),
+    }}
+
+
+class BadRequest(ValueError):
+    """Client error in a completion body (HTTP 400)."""
+
+
+def parse_completion_body(raw: bytes, tokenizer=None,
+                          ) -> Tuple[List[int], SamplingParams, bool]:
+    """Parse a ``/v1/completions`` body into ``(prompt token ids,
+    SamplingParams, stream?)``.  Raises :class:`BadRequest` on
+    anything the engine could never serve."""
+    try:
+        doc = json.loads(raw.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise BadRequest(f"body is not JSON: {e}") from e
+    if not isinstance(doc, dict):
+        raise BadRequest("body must be a JSON object")
+    prompt = doc.get("prompt")
+    if isinstance(prompt, str):
+        if tokenizer is None:
+            raise BadRequest("string prompt needs a tokenizer; send "
+                             "token ids")
+        tokens = list(tokenizer.encode(prompt))
+    elif (isinstance(prompt, list) and prompt
+            and all(isinstance(t, int) and not isinstance(t, bool)
+                    for t in prompt)):
+        tokens = list(prompt)
+    else:
+        raise BadRequest("prompt must be a non-empty string or a list "
+                         "of token ids")
+    try:
+        sp = SamplingParams(
+            temperature=float(doc.get("temperature", 0.0)),
+            top_k=int(doc.get("top_k", 0)),
+            max_new_tokens=int(doc.get("max_tokens", 16)),
+            eos_id=(int(doc["eos_id"])
+                    if doc.get("eos_id") is not None else None))
+    except (TypeError, ValueError) as e:
+        raise BadRequest(f"bad sampling field: {e}") from e
+    if sp.max_new_tokens < 1:
+        raise BadRequest("max_tokens must be >= 1")
+    stream = bool(doc.get("stream", False))
+    return tokens, sp, stream
+
+
+class _ServingHTTPServer(ThreadingHTTPServer):
+    daemon_threads = True       # in-flight handlers die with the server
+    allow_reuse_address = True
+    frontend: "HttpFrontend"
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server: _ServingHTTPServer
+
+    def log_message(self, *args: Any) -> None:     # quiet by default
+        pass
+
+    # -- GET: health + metrics -----------------------------------------
+    def do_GET(self) -> None:
+        fe = self.server.frontend
+        if self.path == "/healthz":
+            self._send_json(200, fe.health())
+        elif self.path == "/metrics":
+            body = fe.registry.to_prometheus().encode("utf-8")
+            self._send(200, body,
+                       "text/plain; version=0.0.4; charset=utf-8")
+        elif self.path == "/metrics.json":
+            self._send(200, fe.registry.snapshot_json().encode("utf-8"),
+                       "application/json")
+        else:
+            self._send_json(404, {"error": {"type": "NotFound",
+                                            "message": self.path}})
+
+    # -- POST: completions ----------------------------------------------
+    def do_POST(self) -> None:
+        fe = self.server.frontend
+        if self.path != "/v1/completions":
+            self._send_json(404, {"error": {"type": "NotFound",
+                                            "message": self.path}})
+            return
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            tokens, sp, stream = parse_completion_body(
+                self.rfile.read(n), fe.tokenizer)
+        except BadRequest as e:
+            fe._c_bad.inc()
+            self._send_json(400, error_payload(e))
+            return
+        req = Request(uid=0, prompt=tokens, sampling=sp)
+        fe._c_requests.inc()
+        if stream:
+            self._stream_completion(fe, req)
+        else:
+            self._block_completion(fe, req)
+
+    # ------------------------------------------------------------------
+    def _stream_completion(self, fe: "HttpFrontend", req: Request) -> None:
+        backend = fe.backend
+        try:
+            handle = backend.submit(req)
+        except Exception as e:                      # noqa: BLE001
+            self._send_json(503, error_payload(e))
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        self.close_connection = True
+        t0 = time.perf_counter()
+        t_first: Optional[float] = None
+        n_sent = 0
+        try:
+            for tok in backend.stream(handle, timeout=fe.token_timeout):
+                if t_first is None:
+                    t_first = time.perf_counter()
+                self.wfile.write(sse_frame(fe.token_frame(tok)))
+                self.wfile.flush()
+                n_sent += 1
+        except (BrokenPipeError, ConnectionResetError, OSError):
+            # the CLIENT went away: free the engine slot + KV pages
+            backend.cancel(handle)
+            fe._c_disconnects.inc()
+            return
+        except BaseException as e:                  # noqa: BLE001
+            # FAILED handle (engine/worker error) or token timeout:
+            # surface the cause in-band, then end the stream
+            if isinstance(e, TimeoutError):
+                backend.cancel(handle)
+            fe._c_failed.inc()      # before [DONE]: a client that saw
+            self._try_write(        # the frame can already scrape it
+                sse_frame(error_payload(e)) + SSE_DONE)
+            return
+        t1 = time.perf_counter()
+        done = {"done": {
+            "prompt_tokens": len(req.prompt),
+            "completion_tokens": n_sent,
+            "finish_reason": "length",
+            "ttft_ms": round(((t_first or t1) - t0) * 1e3, 3),
+            "latency_ms": round((t1 - t0) * 1e3, 3),
+        }}
+        self._try_write(sse_frame(done) + SSE_DONE)
+
+    def _block_completion(self, fe: "HttpFrontend", req: Request) -> None:
+        backend = fe.backend
+        handle = None
+        try:
+            handle = backend.submit(req)
+            comp = backend.result(handle, timeout=fe.request_timeout)
+        except TimeoutError as e:
+            if handle is not None:
+                backend.cancel(handle)
+            fe._c_failed.inc()
+            self._send_json(504, error_payload(e))
+            return
+        except BaseException as e:                  # noqa: BLE001
+            fe._c_failed.inc()
+            self._send_json(500, error_payload(e))
+            return
+        text = (fe.tokenizer.decode(comp.tokens)
+                if fe.tokenizer is not None else "")
+        self._send_json(200, {
+            "id": f"cmpl-{comp.uid}",
+            "object": "text_completion",
+            "choices": [{"index": 0, "text": text,
+                         "tokens": list(comp.tokens),
+                         "finish_reason": "length"}],
+            "usage": {"prompt_tokens": comp.prompt_len,
+                      "completion_tokens": len(comp.tokens),
+                      "total_tokens": comp.prompt_len + len(comp.tokens)},
+            "timing": {"ttft_ms": round((comp.t_first - comp.t0) * 1e3, 3),
+                       "latency_ms": round(comp.latency_s * 1e3, 3)},
+        })
+
+    # ------------------------------------------------------------------
+    def _send(self, status: int, body: bytes, ctype: str) -> None:
+        self.send_response(status)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_json(self, status: int, doc: Dict[str, Any]) -> None:
+        self._send(status, json.dumps(doc, sort_keys=True).encode("utf-8"),
+                   "application/json")
+
+    def _try_write(self, data: bytes) -> None:
+        try:
+            self.wfile.write(data)
+            self.wfile.flush()
+        except OSError:
+            pass        # client already gone; nothing left to tell it
+
+
+class HttpFrontend:
+    """Threaded HTTP server over one engine-like backend.
+
+    ``start()`` binds and serves on a background thread (``port=0``
+    picks a free port — ``self.port`` is the bound one); ``close()``
+    stops accepting, joins the server thread and optionally shuts the
+    backend down.  One handler thread per connection (stdlib
+    ``ThreadingHTTPServer``), so a streaming client parks only its own
+    thread while the engine stepper keeps serving everyone else.
+    """
+
+    def __init__(self, backend: Any, *, tokenizer: Any = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 token_timeout: float = 120.0,
+                 request_timeout: float = 600.0) -> None:
+        self.backend = backend
+        self.tokenizer = tokenizer
+        self.token_timeout = token_timeout
+        self.request_timeout = request_timeout
+        self._server = _ServingHTTPServer((host, port), _Handler)
+        self._server.frontend = self
+        self.host, self.port = self._server.server_address[:2]
+        self._thread: Optional[threading.Thread] = None
+        reg = self.registry
+        self._c_requests = reg.counter(
+            "http.requests", "completion requests accepted").labels()
+        self._c_bad = reg.counter(
+            "http.bad_requests", "completion bodies rejected (400)"
+            ).labels()
+        self._c_failed = reg.counter(
+            "http.failed", "completions that surfaced an error/timeout"
+            ).labels()
+        self._c_disconnects = reg.counter(
+            "http.client_disconnects",
+            "streams cancelled because the client went away").labels()
+
+    @property
+    def registry(self):
+        return self.backend.registry
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def health(self) -> Dict[str, Any]:
+        doc = {"status": "ok", "backend": type(self.backend).__name__}
+        backend_health = getattr(self.backend, "health", None)
+        if callable(backend_health):
+            doc.update(backend_health())
+        return doc
+
+    def token_frame(self, tok: int) -> Dict[str, Any]:
+        """The per-token SSE payload (kept tiny and deterministic)."""
+        text = (self.tokenizer.decode([tok])
+                if self.tokenizer is not None else "")
+        return {"index": 0, "text": text, "token": int(tok)}
+
+    # ------------------------------------------------------------------
+    def start(self) -> "HttpFrontend":
+        if self._thread is not None:
+            raise RuntimeError("frontend already started")
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, name="http-frontend",
+            daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self, *, shutdown_backend: bool = False) -> None:
+        """Stop serving (idempotent).  In-flight handler threads are
+        daemons riding the backend's streams; shutting the backend down
+        (``shutdown_backend=True``) terminates their handles too."""
+        if self._thread is not None:
+            self._server.shutdown()
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self._server.server_close()
+        if shutdown_backend:
+            self.backend.shutdown()
+
+    def __enter__(self) -> "HttpFrontend":
+        return self.start() if self._thread is None else self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

@@ -140,6 +140,33 @@ class PrefixMatch:
 _CHAIN_ROOT = 0x9E3779B97F4A7C15   # arbitrary non-zero chain seed
 
 
+def prefix_chain_key(tokens: Sequence[int], page_size: int, *,
+                     max_blocks: Optional[int] = None) -> Optional[int]:
+    """Chain hash over the leading *full* ``page_size`` token blocks of
+    a prompt — the same ``hash((chain, block))`` scheme
+    :class:`PrefixCache` keys pages by, exposed for callers that need
+    the *identity* of a shared prefix without a pool: the multi-replica
+    router uses it to map shared-system-prompt requests onto the
+    replica whose pool already holds those pages (prefix-affinity
+    routing, ``repro.serving.router``).
+
+    ``max_blocks`` caps how much of the prompt the key commits to (the
+    router keys on the first block or two — the system prompt — so
+    requests differing only in their user tail still share a key).
+    Returns ``None`` when the prompt has no full block: there is no
+    shareable page-aligned prefix to be affine to.
+    """
+    n = len(tokens) // page_size
+    if max_blocks is not None:
+        n = min(n, max_blocks)
+    if n <= 0:
+        return None
+    h = _CHAIN_ROOT
+    for i in range(n):
+        h = hash((h, tuple(tokens[i * page_size:(i + 1) * page_size])))
+    return h
+
+
 class PrefixCache:
     """Prompt-prefix hash map: token-block chain hash -> physical page.
 

@@ -1,0 +1,106 @@
+"""Engine-worker subprocess: ``python -m repro.serving.worker``.
+
+One replica of the multi-replica serving stack: a private model +
+``AsyncEngine`` + KV page pool behind an :class:`~repro.serving.http.
+HttpFrontend`, owned and monitored by ``repro.serving.supervisor`` and
+routed to by ``repro.serving.router`` (``launch/serve.py --http
+--replicas N``).
+
+Startup handshake: the worker binds (``--port 0`` picks a free port),
+then prints one line ``READY port=<N>`` on stdout — the supervisor
+blocks on that line before wiring the replica into the router's ring.
+Shutdown is SIGTERM/SIGINT -> drain -> exit 0; anything harder
+(SIGKILL, the fault-injection tests) is detected upstream as a broken
+connection + dead process.
+
+``--arch tiny`` is the subprocess twin of the benchmark suite's
+``bench-tiny`` model (same config, same ``PRNGKey(0)`` params), so a
+seeded greedy request answered over the wire must be byte-identical to
+the in-process engine — the cross-process parity anchor for
+``benchmarks/serving_bench.py`` and ``tests/test_router.py``.  Any
+registry arch id serves its REDUCED variant, matching
+``repro.launch.serve``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import threading
+
+
+def build_tiny(seed: int = 0):
+    """The benchmark suite's ``bench-tiny`` model (see
+    ``benchmarks/serving_bench.py``): deterministic params from
+    ``PRNGKey(seed)`` so every process derives identical weights."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import ModelConfig, build_model
+    cfg = ModelConfig(name="bench-tiny", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 picks a free port (reported via READY)")
+    ap.add_argument("--arch", default="tiny",
+                    help="'tiny' (bench-tiny model) or a registry arch "
+                         "id served reduced")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--max-running", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--token-timeout", type=float, default=120.0)
+    args = ap.parse_args(argv)
+
+    if args.arch == "tiny":
+        model, params = build_tiny(args.seed)
+    else:
+        import dataclasses
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..configs import get_config
+        from ..models import build_model, reduced_config
+        cfg = reduced_config(get_config(args.arch))
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32,
+                                  vocab_size=max(cfg.vocab_size, 259))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed))
+
+    from ..data.tokenizer import ByteTokenizer
+    from .async_engine import AsyncEngine
+    from .http import HttpFrontend
+
+    engine = AsyncEngine(
+        model, params, max_len=args.max_len, max_running=args.max_running,
+        page_size=args.page_size, n_pages=args.n_pages,
+        prefill_chunk=args.prefill_chunk,
+        prefix_cache=not args.no_prefix_cache)
+    fe = HttpFrontend(engine, tokenizer=ByteTokenizer(), host=args.host,
+                      port=args.port, token_timeout=args.token_timeout)
+    fe.start()
+
+    stop = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: stop.set())
+    # the supervisor's handshake line — keep the format stable
+    print(f"READY port={fe.port}", flush=True)
+    stop.wait()
+    fe.close(shutdown_backend=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

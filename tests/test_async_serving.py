@@ -344,3 +344,86 @@ class TestAsyncEngine:
                 per_uid[uid].append(tok)
         for s in seqs:
             assert per_uid[s.uid] == s.generated
+
+
+class TestStreamInteractive:
+    """``launch/serve.py --interactive`` glue: a handle landing FAILED
+    used to crash the session via the bare ``AsyncEngineError`` and
+    drop the chained cause entirely; ``stream_interactive`` must print
+    the cause and report a verdict instead."""
+
+    def test_failed_handle_prints_chained_cause(self):
+        from repro.launch.serve import stream_interactive
+        from repro.serving.async_engine import AsyncEngineError
+
+        class FakeEng:
+            def stream(self, handle, timeout=None):
+                yield 5
+                err = AsyncEngineError("request 0 failed")
+                err.__cause__ = ValueError("page budget exceeded")
+                raise err
+
+        class H:
+            state = RequestState.FAILED
+
+        out = []
+        verdict = stream_interactive(FakeEng(), H(), out.append)
+        assert verdict == "failed"
+        text = "".join(out)
+        assert "5" in text                      # tokens before the fall
+        assert "request 0 failed" in text
+        assert "ValueError" in text and "page budget exceeded" in text
+
+    def test_timeout_cancels_and_reports_failed(self):
+        from repro.launch.serve import stream_interactive
+
+        class FakeEng:
+            cancelled = []
+
+            def stream(self, handle, timeout=None):
+                raise TimeoutError("no token within 1 s")
+                yield  # pragma: no cover
+
+            def cancel(self, handle):
+                self.cancelled.append(handle)
+                return True
+
+        class H:
+            state = RequestState.DECODING
+
+        eng, h, out = FakeEng(), H(), []
+        assert stream_interactive(eng, h, out.append) == "failed"
+        assert eng.cancelled == [h]
+        assert "timed out" in "".join(out)
+
+    @pytest.mark.slow
+    def test_real_failed_handle_reports_cause(self, tiny):
+        from repro.launch.serve import stream_interactive
+        _, model, params = tiny
+        with AsyncEngine(model, params, max_len=16, max_running=2,
+                         page_size=4) as eng:
+            bad = eng.submit(Request(uid=0, prompt=[1] * 17))
+            out = []
+            verdict = stream_interactive(eng, bad, out.append,
+                                         timeout=120)
+        assert verdict == "failed"
+        assert bad.state is RequestState.FAILED
+        # the engine-side validation error made it to the terminal
+        assert "caused by" in "".join(out)
+        assert "ValueError" in "".join(out)
+
+    @pytest.mark.slow
+    def test_real_cancelled_handle_reports_cancelled(self, tiny):
+        from repro.launch.serve import stream_interactive
+        _, model, params = tiny
+        with AsyncEngine(model, params, max_len=64, max_running=2,
+                         page_size=4, prefill_chunk=1,
+                         prefix_cache=False) as eng:
+            h = eng.submit(Request(uid=0, prompt=list(range(1, 40)),
+                                   sampling=SamplingParams(
+                                       max_new_tokens=50)))
+            eng.cancel(h)
+            out = []
+            verdict = stream_interactive(eng, h, out.append, timeout=120)
+        assert verdict == "cancelled"
+        assert "cancelled" in "".join(out)

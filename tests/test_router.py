@@ -1,0 +1,419 @@
+"""Multi-replica router (PR: HTTP front-end + prefix-affinity router).
+
+Three layers, mirroring the subsystem:
+
+* **AffinityRing properties** (fast, hypothesis-compat shim): same key
+  -> same live replica, deterministic across instances; a replica's
+  death remaps exactly its own keyspace; the least-loaded fallback can
+  never pick a dead replica.
+* **Router semantics over in-process fake workers** (fast, no
+  subprocesses): token delivery, affinity placement, retry-on-death
+  for zero-token requests, FAILED-with-chained-cause for mid-stream
+  death, cancellation, metrics.
+* **Fault injection over real worker subprocesses** (``slow``):
+  SIGKILL a worker mid-stream and mid-queue — in-flight handles FAIL
+  with the death chained, zero-token requests retry on the survivor,
+  the ring drains the dead replica, the fleet leaves no orphans after
+  ``shutdown()``, and greedy tokens over the full HTTP stack match the
+  in-process engine byte-for-byte.
+"""
+
+import http.client
+import json
+import random
+import threading
+import time
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving import (NoReplicasError, Request, RouterError,
+                           SamplingParams, WorkerDiedError,
+                           prefix_chain_key)
+from repro.serving.async_engine import RequestState
+from repro.serving.router import (AffinityRing, Router, _mix64,
+                                  pick_least_loaded)
+
+# ----------------------------------------------------------------------
+# affinity ring properties
+# ----------------------------------------------------------------------
+KEYS = st.integers(min_value=0, max_value=(1 << 64) - 1)
+RIDS = st.lists(st.integers(min_value=0, max_value=31), min_size=1,
+                max_size=8)
+
+
+class TestAffinityRing:
+    @settings(max_examples=50)
+    @given(KEYS, RIDS)
+    def test_pick_is_deterministic_across_instances(self, key, rids):
+        a, b = AffinityRing(rids), AffinityRing(reversed(rids))
+        assert a.pick(key) == b.pick(key)
+        assert a.pick(key) in a.live()
+
+    @settings(max_examples=30)
+    @given(st.lists(KEYS, min_size=1, max_size=40), RIDS)
+    def test_death_remaps_only_the_dead_replicas_keys(self, keys, rids):
+        ring = AffinityRing(rids)
+        before = {k: ring.pick(k) for k in keys}
+        victim = sorted(set(rids))[0]
+        ring.remove(victim)
+        if not ring.live():
+            return
+        for k in keys:
+            after = ring.pick(k)
+            if before[k] != victim:
+                # survivors' keyspaces never move (their prefix pages
+                # stay warm) ...
+                assert after == before[k]
+            else:
+                # ... and the dead replica's keys land on a survivor
+                assert after != victim and after in ring.live()
+
+    @settings(max_examples=30)
+    @given(st.lists(KEYS, min_size=1, max_size=40), RIDS)
+    def test_rejoin_restores_the_original_map(self, keys, rids):
+        ring = AffinityRing(rids)
+        before = {k: ring.pick(k) for k in keys}
+        victim = max(rids)
+        ring.remove(victim)
+        ring.add(victim)
+        assert {k: ring.pick(k) for k in keys} == before
+
+    def test_empty_ring_raises(self):
+        ring = AffinityRing([1])
+        ring.remove(1)
+        with pytest.raises(NoReplicasError):
+            ring.pick(123)
+
+    def test_mix64_spreads_consecutive_keys(self):
+        picks = {AffinityRing(range(4)).pick(k) for k in range(64)}
+        assert picks == set(range(4))    # not all on one replica
+        assert len({_mix64(x) for x in range(1000)}) == 1000
+
+    @settings(max_examples=50)
+    @given(RIDS, st.lists(st.integers(min_value=0, max_value=31),
+                          max_size=4),
+           st.integers(min_value=0, max_value=999))
+    def test_least_loaded_never_picks_a_dead_replica(self, rids, dead,
+                                                     seed):
+        live = sorted(set(rids) - set(dead))
+        if not live:
+            return
+        inflight = {r: r % 3 for r in set(rids) | set(dead)}
+        rng = random.Random(seed)
+        assert pick_least_loaded(live, inflight, rng) in live
+
+    def test_least_loaded_prefers_the_lighter_of_two(self):
+        rng = random.Random(0)
+        got = [pick_least_loaded([0, 1], {0: 5, 1: 0}, rng)
+               for _ in range(20)]
+        assert all(g == 1 for g in got)
+
+
+class TestPrefixChainKey:
+    def test_same_full_blocks_same_key_despite_tail(self):
+        a = prefix_chain_key(list(range(32)) + [99, 98], 16)
+        b = prefix_chain_key(list(range(32)) + [1], 16)
+        assert a is not None and a == b
+
+    def test_short_prompt_has_no_key(self):
+        assert prefix_chain_key([1, 2, 3], 16) is None
+
+    def test_max_blocks_caps_the_chain(self):
+        base = list(range(32))
+        a = prefix_chain_key(base + list(range(100, 116)), 16,
+                             max_blocks=2)
+        b = prefix_chain_key(base + list(range(200, 216)), 16,
+                             max_blocks=2)
+        assert a == b
+        assert (prefix_chain_key(base + list(range(100, 116)), 16)
+                != prefix_chain_key(base + list(range(200, 216)), 16))
+
+    def test_matches_prefix_cache_chain_scheme(self):
+        from repro.serving.kv_pool import _CHAIN_ROOT
+        toks = list(range(16))
+        assert prefix_chain_key(toks, 16) == hash((_CHAIN_ROOT,
+                                                   tuple(toks)))
+
+
+# ----------------------------------------------------------------------
+# router over in-process fake workers
+# ----------------------------------------------------------------------
+class FakeWorker:
+    """In-process stand-in for HttpWorkerClient: replays a token list,
+    optionally 'dying' (broken connection) after ``die_after`` tokens."""
+
+    def __init__(self, tokens=(11, 12, 13), *, die_after=None,
+                 delay=0.0):
+        self.tokens = list(tokens)
+        self.die_after = die_after
+        self.delay = delay
+        self.bodies = []
+        self._alive = True
+
+    def alive(self):
+        return self._alive
+
+    def describe(self):
+        return "fake"
+
+    def stream_completion(self, body, *, timeout):
+        self.bodies.append(body)
+        out = self.tokens[:int(body["max_tokens"])]
+        for i, t in enumerate(out):
+            if self.die_after is not None and i >= self.die_after:
+                self._alive = False
+                raise WorkerDiedError("fake worker died")
+            if self.delay:
+                time.sleep(self.delay)
+            yield {"index": 0, "text": "", "token": t}
+        if self.die_after is not None and self.die_after >= len(out):
+            self._alive = False
+            raise WorkerDiedError("fake worker died at the end")
+        yield {"done": {"prompt_tokens": len(body["prompt"]),
+                        "completion_tokens": len(out),
+                        "finish_reason": "length"}}
+
+
+def _req(prompt, max_new=3):
+    return Request(uid=0, prompt=prompt,
+                   sampling=SamplingParams(max_new_tokens=max_new))
+
+
+KEYED = list(range(1, 33))      # two full 16-token blocks -> keyed
+
+
+class TestRouterFakeWorkers:
+    def test_tokens_and_completion_round_trip(self):
+        r = Router({0: FakeWorker([5, 6, 7])}, page_size=16)
+        h = r.submit(_req(KEYED, max_new=3))
+        assert list(r.stream(h, timeout=5)) == [5, 6, 7]
+        comp = r.result(h, timeout=5)
+        assert comp.tokens == [5, 6, 7]
+        assert comp.prompt_len == len(KEYED)
+        assert h.state is RequestState.FINISHED
+        r.shutdown()
+
+    def test_on_token_fires_per_token(self):
+        r = Router({0: FakeWorker([5, 6])}, page_size=16)
+        got = []
+        h = r.submit(_req(KEYED, max_new=2), on_token=got.append)
+        r.result(h, timeout=5)
+        assert got == [5, 6]
+        r.shutdown()
+
+    def test_same_prefix_same_replica(self):
+        workers = {i: FakeWorker() for i in range(4)}
+        r = Router(workers, page_size=16)
+        tails = ([], [77], [88, 89])
+        handles = [r.submit(_req(KEYED + t)) for t in tails]
+        for h in handles:
+            r.result(h, timeout=5)
+        assert len({h.replica for h in handles}) == 1
+        snap = json.loads(r.registry.snapshot_json())
+        counters = {(c["name"], tuple(sorted(c["labels"].items()))):
+                    c["value"] for c in snap["counters"]}
+        assert counters[("router.affinity.keyed", ())] == 3
+        assert counters[("router.affinity.hits", ())] == 2
+        r.shutdown()
+
+    def test_unkeyed_uses_least_loaded_fallback(self):
+        workers = {0: FakeWorker(), 1: FakeWorker()}
+        r = Router(workers, page_size=16, seed=3)
+        h = r.submit(_req([1, 2, 3]))        # < one block: no key
+        r.result(h, timeout=5)
+        assert h.replica in (0, 1)
+        assert r.registry.get("router.affinity.keyed").value() == 0
+        r.shutdown()
+
+    def test_zero_token_death_retries_on_survivor(self):
+        # the keyed replica dies before any token: the request never
+        # produced state, so it must re-run elsewhere
+        first = AffinityRing([0, 1]).pick(
+            prefix_chain_key(KEYED, 16, max_blocks=2))
+        good = FakeWorker([9, 9, 9])
+        workers = {first: FakeWorker(die_after=0), 1 - first: good}
+        r = Router(workers, page_size=16)
+        h = r.submit(_req(KEYED))
+        comp = r.result(h, timeout=5)
+        assert comp.tokens == [9, 9, 9]
+        assert h.n_retries == 1 and h.replica == 1 - first
+        assert r.health()["live"] == 1
+        assert first not in r.ring
+        r.shutdown()
+
+    def test_midstream_death_fails_with_chained_cause(self):
+        r = Router({0: FakeWorker(die_after=2)}, page_size=16)
+        h = r.submit(_req(KEYED, max_new=5))
+        with pytest.raises(RouterError) as ei:
+            list(r.stream(h, timeout=5))
+        assert h.state is RequestState.FAILED
+        cause = ei.value.__cause__
+        assert isinstance(cause, WorkerDiedError)
+        assert "mid-stream" in str(cause)
+        assert isinstance(cause.__cause__, WorkerDiedError)
+        r.shutdown()
+
+    def test_retries_are_bounded(self):
+        workers = {0: FakeWorker(die_after=0), 1: FakeWorker(die_after=0),
+                   2: FakeWorker(die_after=0)}
+        r = Router(workers, page_size=16, max_retries=1)
+        h = r.submit(_req(KEYED))
+        with pytest.raises(RouterError):
+            r.result(h, timeout=5)
+        assert h.n_retries == 1
+        r.shutdown()
+
+    def test_all_dead_surfaces_no_replicas(self):
+        r = Router({0: FakeWorker(die_after=0)}, page_size=16,
+                   max_retries=5)
+        h = r.submit(_req(KEYED))
+        with pytest.raises(RouterError) as ei:
+            r.result(h, timeout=5)
+        assert isinstance(ei.value.__cause__, NoReplicasError)
+        r.shutdown()
+
+    def test_cancel_mid_stream(self):
+        r = Router({0: FakeWorker([1] * 50, delay=0.02)}, page_size=16)
+        h = r.submit(_req(KEYED, max_new=50))
+        for _ in r.stream(h, timeout=5):
+            assert r.cancel(h)
+            break
+        t0 = time.time()
+        while not h.done and time.time() - t0 < 5:
+            time.sleep(0.01)
+        assert h.state is RequestState.CANCELLED
+        with pytest.raises(Exception):
+            r.result(h, timeout=1)
+        r.shutdown()
+
+    def test_inflight_gauge_returns_to_zero(self):
+        r = Router({0: FakeWorker()}, page_size=16)
+        r.result(r.submit(_req(KEYED)), timeout=5)
+        snap = json.loads(r.registry.snapshot_json())
+        g = [x for x in snap["gauges"]
+             if x["name"] == "router.inflight"]
+        assert g and all(x["value"] == 0 for x in g)
+        live = [x for x in snap["gauges"]
+                if x["name"] == "router.replicas_live"]
+        assert live[0]["value"] == 1
+        r.shutdown()
+
+
+# ----------------------------------------------------------------------
+# fault injection over real worker subprocesses (slow)
+# ----------------------------------------------------------------------
+def _start_fleet(n, extra=()):
+    from repro.serving import Router, Supervisor
+    sup = Supervisor(n, ["--arch", "tiny", *extra])
+    clients = sup.start()
+    router = Router(clients, page_size=16)
+    sup.on_death = lambda rid, rc: router.mark_dead(rid)
+    return sup, router
+
+
+@pytest.mark.slow
+class TestWorkerFleetFaults:
+    def test_sigkill_midstream_and_midqueue(self):
+        # one running slot per worker: A streams, B (same affinity key)
+        # queues behind it with zero tokens when the worker dies
+        sup, router = _start_fleet(2, ["--max-running", "1"])
+        try:
+            killed = threading.Event()
+
+            def kill_after_3(tok, _n=[0]):
+                _n[0] += 1
+                if _n[0] == 3 and not killed.is_set():
+                    sup.kill(a.replica)          # SIGKILL mid-stream
+                    killed.set()
+
+            a = router.submit(_req(KEYED, max_new=400),
+                              on_token=kill_after_3)
+            # wait until A is actually streaming so B queues behind it
+            t0 = time.time()
+            while not a.tokens and time.time() - t0 < 120:
+                time.sleep(0.02)
+            assert a.tokens, "A never started streaming"
+            b = router.submit(_req(KEYED + [7], max_new=4))
+            assert b.request.prompt[:32] == a.request.prompt[:32]
+
+            # A: mid-stream death -> FAILED, cause chained
+            with pytest.raises(RouterError) as ei:
+                router.result(a, timeout=120)
+            assert a.state is RequestState.FAILED
+            assert isinstance(ei.value.__cause__, WorkerDiedError)
+
+            # B: zero tokens -> retried on the survivor, finishes
+            comp = router.result(b, timeout=120)
+            assert len(comp.tokens) == 4
+            assert b.replica != a.replica
+
+            # the ring drained the dead replica; the router stays up
+            # and the survivor keeps serving new work
+            assert router.health()["live"] == 1
+            assert a.replica not in router.ring
+            c = router.submit(_req(KEYED, max_new=3))
+            assert len(router.result(c, timeout=120).tokens) == 3
+            assert c.replica == b.replica
+        finally:
+            router.shutdown()
+            sup.shutdown()
+        # no orphan subprocesses after shutdown()
+        assert all(not alive for alive in sup.alive().values())
+        assert all(p.poll() is not None for p in sup.procs.values())
+
+    def test_full_http_stack_greedy_parity(self):
+        # the acceptance gate: greedy tokens over router + worker
+        # subprocess + two HTTP hops == in-process AsyncEngine, and the
+        # same prompt re-asked is an affinity hit
+        import jax
+
+        from repro.serving import AsyncEngine, HttpFrontend
+        from repro.serving.worker import build_tiny
+        sup, router = _start_fleet(2)
+        fe = HttpFrontend(router).start()
+        try:
+            prompt = list(range(1, 25))
+            body = json.dumps({"prompt": prompt, "max_tokens": 6,
+                               "stream": True})
+            wire = []
+            for _ in range(2):      # second ask: same key, same replica
+                toks = []
+                conn = http.client.HTTPConnection(fe.host, fe.port,
+                                                  timeout=120)
+                conn.request("POST", "/v1/completions", body,
+                             {"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                while True:
+                    line = resp.readline().strip()
+                    if not line.startswith(b"data:"):
+                        continue
+                    payload = line[5:].strip()
+                    if payload == b"[DONE]":
+                        break
+                    ev = json.loads(payload)
+                    assert "error" not in ev, ev
+                    if "token" in ev:
+                        toks.append(ev["token"])
+                conn.close()
+                wire.append(toks)
+            assert wire[0] == wire[1] and len(wire[0]) == 6
+
+            model, params = build_tiny()
+            with AsyncEngine(model, params, max_len=128,
+                             page_size=16) as eng:
+                h = eng.submit(_req(prompt, max_new=6))
+                ref = list(eng.stream(h, timeout=120))
+            assert wire[0] == ref, (wire[0], ref)
+            del model, params
+            jax.clear_caches()
+
+            snap = json.loads(router.registry.snapshot_json())
+            hits = [c for c in snap["counters"]
+                    if c["name"] == "router.affinity.hits"]
+            assert hits[0]["value"] >= 1
+        finally:
+            fe.close()
+            router.shutdown()
+            sup.shutdown()
+        assert all(p.poll() is not None for p in sup.procs.values())

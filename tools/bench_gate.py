@@ -1,10 +1,10 @@
 """Bench-regression gate (``tools/check.sh --bench``).
 
 Runs the key ``benchmarks/serving_bench.py`` sections, writes
-``BENCH_PR6.json`` at the repo root, and compares the tracked metrics
+``BENCH_PR7.json`` at the repo root, and compares the tracked metrics
 against a baseline read *before* the write: the committed/previous
-``BENCH_PR6.json`` itself when present, else the newest other
-``BENCH_*.json`` (e.g. the PR 5 baseline).  Any metric that regresses
+``BENCH_PR7.json`` itself when present, else the newest other
+``BENCH_*.json`` (e.g. the PR 6 baseline).  Any metric that regresses
 more than the threshold (default 20%, knob: ``BENCH_REGRESSION_PCT``
 env var or ``--threshold``) fails the gate with a nonzero exit.
 
@@ -30,6 +30,13 @@ Tracked metrics (direction-aware):
                           tok/s overhead in percent (v) — the
                           observability layer's <= 3% budget
                           (docs/observability.md)
+  http_ttft_p50_ms        serving_http single-replica client-side
+                          TTFT median over the full wire path —
+                          HTTP front door -> router -> worker ->
+                          engine (v); the network edge must not rot
+                          (r2 rows are reported but not gated: on a
+                          single-core host they measure scheduler
+                          contention, not the stack)
 
 A metric present in the current run but NOT in the baseline (a freshly
 landed bench, e.g. the first ``serving_tp.*`` run) is reported as
@@ -39,7 +46,7 @@ next baseline.  Metrics that vanished from the current run are
 reported as ``dropped`` the same way.
 
 Usage:
-  python tools/bench_gate.py run [--out BENCH_PR6.json] [--threshold 20]
+  python tools/bench_gate.py run [--out BENCH_PR7.json] [--threshold 20]
   python tools/bench_gate.py compare CURRENT.json BASELINE.json \
       [--threshold 20]
 
@@ -69,6 +76,7 @@ METRICS: Dict[str, Tuple[str, str]] = {
     "async_ttft_p50_ms": ("serving_async.ttft_p50_ms", "lower"),
     "tp_decode_tok_per_s": ("serving_tp.decode_toks_per_s.s2", "higher"),
     "serving_obs_overhead_pct": ("serving_obs.overhead_pct", "lower"),
+    "http_ttft_p50_ms": ("serving_http.ttft_p50_ms.r1", "lower"),
 }
 
 
@@ -87,6 +95,7 @@ def collect() -> Dict[str, object]:
     rows += serving_bench.serving_obs_rows()
     rows += serving_bench.serving_scan_escape_rows()
     rows += serving_bench.serving_tp_rows()
+    rows += serving_bench.serving_http_rows()
     by_name = {name: derived for name, _us, derived in rows}
 
     metrics = {}
@@ -179,7 +188,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     run_p = sub.add_parser("run", help="run benches, write + compare")
-    run_p.add_argument("--out", default="BENCH_PR6.json")
+    run_p.add_argument("--out", default="BENCH_PR7.json")
     run_p.add_argument("--threshold", type=float, default=None,
                        help="regression threshold in percent")
     cmp_p = sub.add_parser("compare", help="compare two reports")

@@ -6,13 +6,17 @@
 # same entry points, one job per lane.
 #
 #   tools/check.sh            # lint + docs + tier-1 + serving smoke
-#   tools/check.sh --smoke    # serving smoke only (~30 s)
+#   tools/check.sh --smoke    # serving smoke only (~60 s): engine
+#                             # drivers + a live HTTP front door with
+#                             # 2 engine-worker replicas (streamed
+#                             # completion, /healthz, /metrics,
+#                             # /metrics.json via repro.obs.validate)
 #   tools/check.sh --docs     # doc-link check only (<1 s)
 #   tools/check.sh --lint     # ruff check + format check (skips with a
 #                             # warning when ruff is not installed)
 #   tools/check.sh --bench    # bench-regression gate: runs the key
 #                             # serving_bench sections, writes
-#                             # BENCH_PR6.json, fails on a >20%
+#                             # BENCH_PR7.json, fails on a >20%
 #                             # regression vs the newest BENCH_*.json
 #                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
@@ -124,4 +128,57 @@ python -m repro.launch.serve --arch qwen3-1.7b --engine async \
 python -m repro.obs.validate --metrics "$OBS_TMP/metrics.json" \
     --trace "$OBS_TMP/trace.jsonl" \
     --require-gauge kv_pool.pages_free:node,shard
+echo "== serving smoke: http front door, router over 2 replicas =="
+python -m repro.launch.serve --arch tiny --engine async --http \
+    --replicas 2 --port 0 --port-file "$OBS_TMP/http.port" &
+SERVE_PID=$!
+for _ in $(seq 1 600); do
+    [[ -s "$OBS_TMP/http.port" ]] && break
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "smoke: http serve exited before listening"
+        exit 1
+    fi
+    sleep 0.5
+done
+[[ -s "$OBS_TMP/http.port" ]] || { echo "smoke: no port file"; exit 1; }
+python - "$(cat "$OBS_TMP/http.port")" "$OBS_TMP/http_metrics.json" <<'PY'
+import json
+import sys
+import urllib.request
+
+port, out = int(sys.argv[1]), sys.argv[2]
+base = f"http://127.0.0.1:{port}"
+body = json.dumps({"prompt": list(range(1, 40)), "max_tokens": 4,
+                   "stream": True}).encode()
+req = urllib.request.Request(
+    base + "/v1/completions", data=body,
+    headers={"Content-Type": "application/json"})
+toks = []
+with urllib.request.urlopen(req, timeout=300) as resp:
+    for line in resp:
+        payload = line.strip()[5:].strip() \
+            if line.startswith(b"data:") else None
+        if payload is None or not payload:
+            continue
+        if payload == b"[DONE]":
+            break
+        ev = json.loads(payload)
+        if "error" in ev:
+            sys.exit(f"smoke: stream error: {ev['error']}")
+        if "token" in ev:
+            toks.append(ev["token"])
+assert len(toks) == 4, f"smoke: wanted 4 streamed tokens, got {toks}"
+health = json.load(urllib.request.urlopen(base + "/healthz", timeout=30))
+assert health.get("status") == "ok", health
+prom = urllib.request.urlopen(base + "/metrics", timeout=30).read()
+assert b"http_requests" in prom and b"router_requests" in prom, prom[:300]
+with urllib.request.urlopen(base + "/metrics.json", timeout=30) as r:
+    open(out, "wb").write(r.read())
+print(f"smoke: streamed {toks} over {base}")
+PY
+python -m repro.obs.validate --metrics "$OBS_TMP/http_metrics.json" \
+    --require-gauge router.inflight:replica \
+    --require-counter router.requests:replica
+kill -TERM "$SERVE_PID"
+wait "$SERVE_PID"
 echo "check.sh: OK"
