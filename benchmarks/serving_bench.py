@@ -70,6 +70,15 @@ bytes —
                      scaling ~= pool ratio) vs the per-layer unrolled
                      layout (in-place row scatter, flat)
 
+The quantization section (``serving_quant.*``, see
+:func:`serving_quant_rows`) serves the same fixed workload full
+precision and under ``--quant q4 --kv-dtype int8``
+(``docs/quantization.md``): decode tok/s both ways, the teacher-forced
+greedy token-match rate against its documented divergence bound
+(``QUANT_MATCH_BOUND``), and the page-capacity rows — bytes per KV
+page and whole pages per fixed 16 MiB budget, fp32 vs int8 (the int8
+format must fit >= 1.9x the pages).
+
 The HTTP section (``serving_http.*``, see :func:`serving_http_rows`)
 drives the full network stack — client HTTP -> ``HttpFrontend`` ->
 ``Router`` -> engine-worker subprocesses — under a saturating
@@ -956,11 +965,129 @@ def serving_http_rows() -> List[Row]:
     return rows
 
 
+#: documented greedy-divergence bound for the quantized serving path
+#: (docs/quantization.md "The divergence gate"): teacher-forced
+#: next-token agreement of --quant q4 --kv-dtype int8 vs the fp32
+#: engine must stay at or above this on the fixed workload (measured
+#: 0.917 at PR 8; the margin absorbs backend numeric drift)
+QUANT_MATCH_BOUND = 0.80
+#: fixed byte budget the capacity rows size page pools against
+QUANT_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def serving_quant_rows() -> List[Row]:
+    """Quantized serving path vs fp32 (``docs/quantization.md``):
+    Q4_0 weights + int8 KV pages through the SAME paged engine on the
+    same fixed workload.
+
+      serving_quant.decode_toks_per_s.fp32 / .q4int8
+                         continuous-engine decode throughput under the
+                         fixed Poisson arrivals, full precision vs
+                         --quant q4 --kv-dtype int8
+      serving_quant.token_match_rate
+                         teacher-forced next-token agreement: the fp32
+                         engine's greedy continuations are replayed
+                         through the quantized engine one position at a
+                         time (prompt + fp32 tokens[:j], max_new=1) and
+                         each greedy pick is compared to the fp32 token
+                         at that position.  Cascade-free — a flipped
+                         token cannot poison later comparisons — so the
+                         rate measures per-step quantization error, not
+                         trajectory luck.  The replay prompts share
+                         pages heavily, so this also exercises
+                         prefix-cache sharing + CoW over int8 pages.
+      serving_quant.match_budget
+                         OK when token_match_rate >= QUANT_MATCH_BOUND
+      serving_quant.page_bytes.fp32 / .int8
+                         device bytes per KV page (all layers/heads)
+      serving_quant.pages_at_16MiB.fp32 / .int8
+                         whole pages that fit in the fixed budget
+      serving_quant.page_capacity_ratio
+                         int8 pages per fp32 page at equal bytes —
+                         4*D/(D+4), 3.56x at bench-tiny's D=32; the
+                         acceptance floor is 1.9x
+
+    The model is warm-trained briefly (fixed seed, deterministic) so
+    greedy argmax has real margins — on random weights every logit gap
+    is noise and the match rate measures luck, not quantization.
+    """
+    from repro.data.pipeline import PackedLMDataset
+    from repro.quant.policy import QuantPolicy
+    from repro.serving import (ContinuousServingEngine, Request,
+                               SamplingParams, throughput_report)
+    from repro.training.loop import train
+    from repro.training.optimizer import AdamWConfig
+
+    model, params0, reqs, arrivals = _setup()
+    ds = PackedLMDataset(seq_len=64, n_docs=500,
+                         vocab_size=model.cfg.vocab_size)
+    params, _, _ = train(model, params0, ds.batches(8),
+                         AdamWConfig(lr=2e-3, warmup_steps=5,
+                                     total_steps=80),
+                         steps=80, log_every=1000)
+    max_new = reqs[0].sampling.max_new_tokens
+    max_len = max(len(r.prompt) for r in reqs) + 2 * max_new + 8
+    q4int8 = QuantPolicy(weights="q4", kv_dtype="int8")
+
+    def engine(quant):
+        return ContinuousServingEngine(
+            model, params, max_len=max_len, max_running=8, page_size=8,
+            quant=quant)
+
+    def throughput(quant):
+        engine(quant).generate(reqs[:1])        # warm compile caches
+        eng = engine(quant)
+        t0 = time.perf_counter()
+        comps = eng.generate(reqs, arrivals=arrivals)
+        wall = time.perf_counter() - t0
+        rep = throughput_report(
+            comps, wall_s=wall,
+            prefill_s=eng.last_phase_s["prefill_s"],
+            decode_s=wall - eng.last_phase_s["prefill_s"])
+        return eng, comps, rep["decode_tok_per_s"]
+
+    feng, fcomps, ftoks = throughput(None)
+    qeng, _qcomps, qtoks = throughput(q4int8)
+
+    # teacher-forced replay: every fp32 continuation position becomes
+    # its own max_new=1 request against the quantized engine
+    one = SamplingParams(temperature=0.0, max_new_tokens=1)
+    replay, want = [], []
+    for r, c in zip(reqs, fcomps):
+        for j in range(len(c.tokens)):
+            replay.append(Request(uid=len(replay),
+                                  prompt=list(r.prompt) + c.tokens[:j],
+                                  sampling=one))
+            want.append(c.tokens[j])
+    eng = engine(q4int8)
+    got = {c.uid: c.tokens for c in eng.generate(replay)}
+    match = sum(int(got[u][0] == want[u]) for u in range(len(want)))
+    rate = match / len(want)
+
+    pb = {"fp32": feng.pool.cfg.page_bytes,
+          "int8": qeng.pool.cfg.page_bytes}
+    pages = {k: QUANT_BUDGET_BYTES // v for k, v in pb.items()}
+    ratio = pb["fp32"] / pb["int8"]
+    return [
+        ("serving_quant.decode_toks_per_s.fp32", 0.0, f"{ftoks:.1f}"),
+        ("serving_quant.decode_toks_per_s.q4int8", 0.0, f"{qtoks:.1f}"),
+        ("serving_quant.token_match_rate", 0.0, f"{rate:.3f}"),
+        ("serving_quant.match_budget", 0.0,
+         "OK" if rate >= QUANT_MATCH_BOUND else "UNDER"),
+        ("serving_quant.page_bytes.fp32", 0.0, f"{pb['fp32']}"),
+        ("serving_quant.page_bytes.int8", 0.0, f"{pb['int8']}"),
+        ("serving_quant.pages_at_16MiB.fp32", 0.0, f"{pages['fp32']}"),
+        ("serving_quant.pages_at_16MiB.int8", 0.0, f"{pages['int8']}"),
+        ("serving_quant.page_capacity_ratio", 0.0, f"{ratio:.2f}x"),
+    ]
+
+
 def all_rows() -> List[Row]:
     return (serving_cb_rows() + serving_prefix_rows() +
             serving_chunk_rows() + serving_async_rows() +
             serving_obs_rows() + serving_scan_escape_rows() +
-            serving_tp_rows() + serving_http_rows())
+            serving_tp_rows() + serving_http_rows() +
+            serving_quant_rows())
 
 
 if __name__ == "__main__":

@@ -61,7 +61,8 @@ def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, block_tables: jax.Array,
                                kv_lens: jax.Array, window=0, *,
                                page_size: int, softcap: float = 0.0,
-                               impl: str = "auto") -> jax.Array:
+                               impl: str = "auto",
+                               k_scale=None, v_scale=None) -> jax.Array:
     """Paged flash-decoding for one token per sequence with GQA.
 
     q (B,1,Hq,D); k_pool,v_pool (n_pages*page_size,Hkv,D) — ONE layer's
@@ -72,6 +73,14 @@ def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
     (``repro.serving.kv_pool``): K/V are addressed *through* the block
     table, so batch membership and sequence length change without
     recompilation or cache copies.
+
+    ``k_scale``/``v_scale`` ((n_pages*page_size, Hkv) f32) select the
+    **int8 page** format (``--kv-dtype int8``): the pools hold int8
+    codes with per-(row, head) scales, dequantized after the block-table
+    gather (O(touched bytes)).  The quantized read currently routes
+    through the jnp reference path on every backend — teaching the
+    Pallas paged kernel to dequantize in-tile is listed future work
+    (``docs/quantization.md``).
     """
     B, one, Hq, D = q.shape
     Hkv = k_pool.shape[1]
@@ -87,7 +96,14 @@ def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
     k_pages = k_pool.reshape(n_pages, page_size, Hkv, D)
     v_pages = v_pool.reshape(n_pages, page_size, Hkv, D)
     qk = q.reshape(B, Hkv, G, D)
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if k_scale is not None or v_scale is not None:
+        ks = k_scale.reshape(n_pages, page_size, Hkv)
+        vs = v_scale.reshape(n_pages, page_size, Hkv)
+        out = _ref.paged_decode_attention_ref(qk, k_pages, v_pages,
+                                              block_tables, kv_lens, window,
+                                              softcap=softcap,
+                                              k_scales=ks, v_scales=vs)
+    elif impl == "ref" or (impl == "auto" and not _on_tpu()):
         out = _ref.paged_decode_attention_ref(qk, k_pages, v_pages,
                                               block_tables, kv_lens, window,
                                               softcap=softcap)

@@ -37,7 +37,8 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array, block_tables: jax.Array,
                                kv_lens: jax.Array,
-                               window=0, softcap: float = 0.0) -> jax.Array:
+                               window=0, softcap: float = 0.0,
+                               k_scales=None, v_scales=None) -> jax.Array:
     """Gather-based paged flash-decoding oracle.
 
     q (B,H,G,D) one token per sequence; k_pages/v_pages (P,ps,H,D) the
@@ -46,6 +47,11 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     per-sequence token count (logical positions are contiguous 0..len-1,
     unlike the ring cache).  Fully-masked rows (kv_len == 0, idle batch
     slots) produce finite garbage, not NaN.
+
+    ``k_scales``/``v_scales`` (P, ps, H) switch on the **int8 page**
+    format (``repro.quant.kv_int8``): pages hold int8 codes and the
+    per-(token, head) scales are gathered through the same block table,
+    so dequantization costs O(gathered bytes), never O(pool bytes).
     """
     B, H, G, D = q.shape
     P, ps, _, _ = k_pages.shape
@@ -55,6 +61,12 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     # gather each sequence's pages, flatten to its logical KV view
     k = k_pages[block_tables].reshape(B, L, H, D)
     v = v_pages[block_tables].reshape(B, L, H, D)
+    if k_scales is not None:
+        k = k.astype(jnp.float32) \
+            * k_scales[block_tables].reshape(B, L, H)[..., None]
+    if v_scales is not None:
+        v = v.astype(jnp.float32) \
+            * v_scales[block_tables].reshape(B, L, H)[..., None]
     s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if softcap:

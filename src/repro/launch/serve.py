@@ -116,6 +116,10 @@ def _serve_replicated(args) -> int:
         worker_args += ["--prefill-chunk", str(args.prefill_chunk)]
     if args.no_prefix_cache:
         worker_args += ["--no-prefix-cache"]
+    if args.quant != "none":
+        worker_args += ["--quant", args.quant]
+    if args.kv_dtype != "fp32":
+        worker_args += ["--kv-dtype", args.kv_dtype]
     sup = Supervisor(args.replicas, worker_args, host=args.host)
     print(f"starting {args.replicas} engine workers "
           f"(--arch {args.arch}) ...", flush=True)
@@ -172,6 +176,16 @@ def main() -> int:
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="continuous engine: disable prompt-prefix "
                          "page sharing")
+    ap.add_argument("--quant", choices=("none", "q4"), default="none",
+                    help="continuous/async engines: weight format — "
+                         "'q4' packs attention/MLP projections to Q4_0 "
+                         "at load (docs/quantization.md)")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8"),
+                    default="fp32",
+                    help="continuous/async engines: KV page format — "
+                         "'int8' stores quantized pages with per-row "
+                         "scales, fitting >=1.9x the pages in the same "
+                         "pool bytes (docs/quantization.md)")
     ap.add_argument("--tp-shards", type=int, default=1,
                     help="continuous/async engines: tensor-parallel "
                          "shards — forces that many host devices "
@@ -210,6 +224,10 @@ def main() -> int:
                                     or args.stats_every):
         ap.error("--metrics-json/--trace/--stats-every report the paged "
                  "serving stack; use --engine continuous or async")
+    if args.engine == "bucket" and (args.quant != "none"
+                                    or args.kv_dtype != "fp32"):
+        ap.error("--quant/--kv-dtype serve through the paged engines; "
+                 "use --engine continuous or async")
     if args.replicas and not args.http:
         ap.error("--replicas needs --http")
     if args.http:
@@ -325,6 +343,12 @@ def main() -> int:
     stat_names = ("serving.steps", "scheduler.running",
                   "scheduler.queue_depth", "scheduler.preemptions",
                   "serving.tokens.decode", "kv_pool.pages_free")
+    quant = None
+    if args.quant != "none" or args.kv_dtype != "fp32":
+        from ..quant.policy import QuantPolicy
+        quant = QuantPolicy(weights=args.quant, kv_dtype=args.kv_dtype)
+        print(f"quant: weights={quant.weights} kv_dtype={quant.kv_dtype} "
+              "(docs/quantization.md)")
     if args.engine == "async":
         eng = AsyncEngine(
             model, params, max_len=max(max_len, 256 + args.max_new)
@@ -332,7 +356,7 @@ def main() -> int:
             max_running=args.max_running, page_size=args.page_size,
             n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
             prefix_cache=not args.no_prefix_cache, mesh=mesh,
-            n_nodes=max(args.tp_shards, 1), tracer=tracer)
+            n_nodes=max(args.tp_shards, 1), quant=quant, tracer=tracer)
         if args.http:        # --replicas 0: in-process engine over HTTP
             from ..serving.http import HttpFrontend
             fe = HttpFrontend(eng, tokenizer=tok, host=args.host,
@@ -392,7 +416,7 @@ def main() -> int:
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk,
             prefix_cache=not args.no_prefix_cache, mesh=mesh,
-            n_nodes=max(args.tp_shards, 1), tracer=tracer)
+            n_nodes=max(args.tp_shards, 1), quant=quant, tracer=tracer)
         comps = eng.generate(reqs)
         st = eng.pool.stats
         print(f"kv pool: {st['fresh_pages']} pages allocated, "

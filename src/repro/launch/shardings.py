@@ -505,10 +505,21 @@ def serving_tp_param_specs(params_shapes: Any, *, axis: str = "model",
     values in the forward are per-shard attention-head outputs and the
     one psum of :func:`make_paged_head_merge` restores full replication
     before ``w_o``.
+
+    Q4_0 weights (``--quant q4``) replace a projection leaf with a
+    ``{"q4_packed", "q4_scales"}`` subtree (``repro.quant.policy``);
+    both members keep the original column (N) layout in their last dim,
+    and Q4_0 quantizes along K — so sharding that last dim by the
+    *parent* weight's rule yields byte-identical blocks to quantizing
+    the already-sharded weight, and the same one-psum-per-layer budget
+    holds.
     """
     def f(path, leaf):
         p = _path_str(path)
-        name = p.split("/")[-1]
+        parts = p.split("/")
+        name = parts[-1]
+        if name in ("q4_packed", "q4_scales") and len(parts) >= 2:
+            name = parts[-2]
         if name in SERVING_TP_HEAD_SHARDED and "attn" in p:
             return P(*([None] * (leaf.ndim - 1) + [axis]))
         return P()
@@ -523,11 +534,18 @@ def paged_cache_specs(cache_shapes: Any, *, axis: str = "model") -> Any:
     page, so page allocation, sharing, CoW and eviction stay pure host
     bookkeeping with zero cross-shard byte traffic.  Block tables (and
     anything else host-written) replicate.
+
+    Int8 pools (``--kv-dtype int8``) add ``k_scale``/``v_scale``
+    buffers (rows, Hkv) whose head dim shards exactly like the code
+    buffers, so each shard dequantizes its local heads with local
+    scales — still zero cross-shard KV traffic.
     """
     def f(path, leaf):
         name = _path_str(path).split("/")[-1]
         if name in ("k", "v") and leaf.ndim == 3:
             return P(None, axis, None)
+        if name in ("k_scale", "v_scale") and leaf.ndim == 2:
+            return P(None, axis)
         return P()
     return jax.tree_util.tree_map_with_path(f, cache_shapes)
 

@@ -90,12 +90,21 @@ def init_mlp(key: jax.Array, d: int, f: int, act: str, dtype: Any) -> Params:
             "w_down": dense_init(ks[1], f, d, dtype)}
 
 
-def mlp(params: Params, x: jax.Array, act: str) -> jax.Array:
+def proj(x: jax.Array, w: Any, qmm=None) -> jax.Array:
+    """``x @ w`` with an optional quantized-matmul hook: the serving
+    runner's Q4_0 mode passes ``qmm`` (``repro.quant.policy.make_qmm``)
+    so projection leaves may be packed-code subtrees instead of dense
+    arrays; every other path leaves ``qmm=None`` and pays nothing."""
+    return x @ w if qmm is None else qmm(x, w)
+
+
+def mlp(params: Params, x: jax.Array, act: str, qmm=None) -> jax.Array:
     if act == "silu":
-        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        h = jax.nn.silu(proj(x, params["w_gate"], qmm)) \
+            * proj(x, params["w_up"], qmm)
     else:
-        h = jax.nn.gelu(x @ params["w_up"])
-    return h @ params["w_down"]
+        h = jax.nn.gelu(proj(x, params["w_up"], qmm))
+    return proj(h, params["w_down"], qmm)
 
 
 # ----------------------------------------------------------------------

@@ -46,7 +46,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from .attention import flash_attention
 from .common import (Params, dense_init, embed_init, layer_norm, mlp, init_mlp,
-                     rms_norm, unembed)
+                     proj, rms_norm, unembed)
 from .config import ModelConfig
 from .moe import init_moe, moe
 from .recurrent import RGLRUState, init_rglru_block, rglru_block
@@ -136,11 +136,12 @@ def _init_layer(key: jax.Array, cfg: ModelConfig, kind: str, *,
 # ----------------------------------------------------------------------
 
 def _project_qkv(cfg: ModelConfig, ap: Params, xq: jax.Array,
-                 xkv: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                 xkv: jax.Array, qmm=None,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     hd = cfg.resolved_head_dim
-    q = xq @ ap["w_q"]
-    k = xkv @ ap["w_k"]
-    v = xkv @ ap["w_v"]
+    q = proj(xq, ap["w_q"], qmm)
+    k = proj(xkv, ap["w_k"], qmm)
+    v = proj(xkv, ap["w_v"], qmm)
     if cfg.qkv_bias:
         q, k, v = q + ap["b_q"], k + ap["b_k"], v + ap["b_v"]
     Bq, Sq = xq.shape[:2]
@@ -222,22 +223,57 @@ def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
     table and attends with absolute-position causal masking.  Decode
     (S == 1) scatters one row per sequence and attends through the
     block table with the gather-based paged kernel.
+
+    An **int8 page pool** (``init_cache(kv_dtype="int8")``) is detected
+    by its ``k_scale``/``v_scale`` buffers: fresh K/V rows are
+    quantized per (token, kv head) before the scatter (codes + scale
+    land in the same physical slots), and reads dequantize *after* the
+    gather — the resumed-prefill context gather here, the block-table
+    gather inside the paged decode read — so the pool is never
+    dequantized wholesale (``repro.quant.kv_int8``).  The fresh
+    one-shot prefill still attends over the exact fp32 K/V (the maths
+    needs nothing from the pool); later reads see the quantized rows.
     """
     from ..kernels.ops import paged_gqa_decode_attention
+    from ..quant.kv_int8 import dequantize_rows, quantize_rows
     B, S = q.shape[:2]
     ps = paged["page_size"]
     write_slots = paged["write_slots"]
+    quantized = "k_scale" in cache
+    new_cache: Dict[str, jax.Array] = {}
+
+    def write(rows_k, rows_v):
+        """Scatter this call's fresh rows ((n, Hkv, D) at write_slots)."""
+        if not quantized:
+            new_cache["k"] = cache["k"].at[write_slots].set(rows_k)
+            new_cache["v"] = cache["v"].at[write_slots].set(rows_v)
+            return
+        qk_, sk_ = quantize_rows(rows_k)
+        qv_, sv_ = quantize_rows(rows_v)
+        new_cache["k"] = cache["k"].at[write_slots].set(qk_)
+        new_cache["v"] = cache["v"].at[write_slots].set(qv_)
+        new_cache["k_scale"] = cache["k_scale"].at[write_slots].set(sk_)
+        new_cache["v_scale"] = cache["v_scale"].at[write_slots].set(sv_)
+
     if S > 1:                                 # prefill: one sequence
-        ck = cache["k"].at[write_slots].set(k[0])
-        cv = cache["v"].at[write_slots].set(v[0])
+        write(k[0], v[0])
+        ck, cv = new_cache["k"], new_cache["v"]
         ctx = paged.get("prefill_ctx")
         if ctx is not None:
             # resumed chunk: earlier tokens' K/V are already resident in
             # the pool (written by prior chunks, shared prefix pages, or
             # a copy-on-write clone) — gather them *after* this chunk's
             # write so q sees [0, kv_len) at absolute positions
-            kctx = ck[ctx["phys"]][None]
-            vctx = cv[ctx["phys"]][None]
+            if quantized:
+                kctx = dequantize_rows(ck[ctx["phys"]],
+                                       new_cache["k_scale"][ctx["phys"]],
+                                       q.dtype)[None]
+                vctx = dequantize_rows(cv[ctx["phys"]],
+                                       new_cache["v_scale"][ctx["phys"]],
+                                       q.dtype)[None]
+            else:
+                kctx = ck[ctx["phys"]][None]
+                vctx = cv[ctx["phys"]][None]
             out = flash_attention(q, kctx, vctx, causal=True,
                                   window=window, q_offset=ctx["q_offset"],
                                   kv_len=ctx["kv_len"], chunk=ATTN_CHUNK,
@@ -247,21 +283,23 @@ def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
                                   chunk=ATTN_CHUNK,
                                   softcap=cfg.attn_logit_softcap)
     else:                                     # decode: one token per slot
-        ck = cache["k"].at[write_slots].set(k[:, 0])
-        cv = cache["v"].at[write_slots].set(v[:, 0])
+        write(k[:, 0], v[:, 0])
         out = paged_gqa_decode_attention(
-            q, ck, cv, paged["block_tables"], paged["kv_len"], window,
-            page_size=ps, softcap=cfg.attn_logit_softcap)
-    return out, {"k": ck, "v": cv}
+            q, new_cache["k"], new_cache["v"], paged["block_tables"],
+            paged["kv_len"], window, page_size=ps,
+            softcap=cfg.attn_logit_softcap,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"))
+    return out, new_cache
 
 
 def _self_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
                positions: jax.Array, theta: jax.Array, window: jax.Array,
                cache: Optional[Dict[str, jax.Array]], *, causal: bool,
-               decode_hook=None, act_constraint=None, paged=None,
+               decode_hook=None, act_constraint=None, paged=None, qmm=None,
                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     B, S, d = x.shape
-    q, k, v = _project_qkv(cfg, ap, x, x)
+    q, k, v = _project_qkv(cfg, ap, x, x, qmm)
     if act_constraint is not None:
         # batch-only pinning stops GSPMD from "helpfully" splitting the
         # replicated-head attention contraction over the model axis and
@@ -315,7 +353,7 @@ def _self_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
         out = jax.checkpoint(attn_fn)(q, k, v, window)
     if act_constraint is not None:
         out = act_constraint(out)
-    return out.reshape(B, S, -1) @ ap["w_o"], new_cache
+    return proj(out.reshape(B, S, -1), ap["w_o"], qmm), new_cache
 
 
 def _cross_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
@@ -347,14 +385,14 @@ def _cross_attn(cfg: ModelConfig, ap: Params, x: jax.Array,
 
 
 def _ffn(cfg: ModelConfig, lp: Params, x: jax.Array,
-         moe_hook=None) -> Tuple[jax.Array, jax.Array]:
+         moe_hook=None, qmm=None) -> Tuple[jax.Array, jax.Array]:
     if "moe" in lp:
         if moe_hook is not None:   # launcher-installed shard_map dispatch
             return moe_hook(lp["moe"], x)
         y, aux = moe(lp["moe"], x, k=cfg.experts_per_token, act=cfg.act,
                      impl=cfg.moe_impl, capacity_factor=cfg.capacity_factor)
         return y, aux
-    return mlp(lp["mlp"], x, cfg.act), jnp.zeros((), jnp.float32)
+    return mlp(lp["mlp"], x, cfg.act, qmm), jnp.zeros((), jnp.float32)
 
 
 def _layer_forward(cfg: ModelConfig, kind: str, lp: Params, x: jax.Array,
@@ -364,6 +402,7 @@ def _layer_forward(cfg: ModelConfig, kind: str, lp: Params, x: jax.Array,
                    causal: bool, decoder_cross: bool = False,
                    single_step: bool = False, moe_hook=None,
                    decode_hook=None, act_constraint=None, paged=None,
+                   qmm=None,
                    ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
     """One block. Returns (x_out, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -373,7 +412,8 @@ def _layer_forward(cfg: ModelConfig, kind: str, lp: Params, x: jax.Array,
         a, kv = _self_attn(cfg, lp["attn"], h, positions, theta, window,
                            None if cache is None else cache.get("self"),
                            causal=causal, decode_hook=decode_hook,
-                           act_constraint=act_constraint, paged=paged)
+                           act_constraint=act_constraint, paged=paged,
+                           qmm=qmm)
         # post-Gather activations are remat save-points: recomputing
         # them would repeat the TP psum in the backward pass
         x = x + checkpoint_name(a, "block_out")
@@ -386,7 +426,7 @@ def _layer_forward(cfg: ModelConfig, kind: str, lp: Params, x: jax.Array,
             assert memory is not None
             x = x + _cross_attn(cfg, lp["xattn"], hx, memory)
         h2 = _apply_norm(cfg, lp["ln2"], x)
-        f, aux = _ffn(cfg, lp, h2, moe_hook)
+        f, aux = _ffn(cfg, lp, h2, moe_hook, qmm)
         x = x + checkpoint_name(f, "block_out")
     elif kind == "xattn":
         assert memory is not None
@@ -458,6 +498,12 @@ class Model:
         #: (installed by serving.runner in mesh mode; the model itself
         #: is then a per-shard "local" model with divided head counts)
         self.paged_head_merge = None
+        #: quantized-matmul hook for the paged serving path (installed
+        #: by serving.runner under ``QuantPolicy(weights="q4")`` —
+        #: ``repro.quant.policy.make_qmm``).  Dense params pass through
+        #: it untouched (plain ``x @ w``), so it is safe to leave
+        #: installed; None keeps the hook-free matmul everywhere else.
+        self.qmm = None
 
     # ------------------------------------------------------------------
     # init
@@ -542,7 +588,8 @@ class Model:
                    cache_len: Optional[int] = None,
                    memory_len: int = 0,
                    page_size: Optional[int] = None,
-                   n_pages: Optional[int] = None) -> Dict[str, Any]:
+                   n_pages: Optional[int] = None,
+                   kv_dtype: str = "fp32") -> Dict[str, Any]:
         """Zero cache.  ``cache_len`` < max_len -> sliding ring buffer.
 
         ``page_size`` switches to the **paged slot/block-table view**
@@ -565,6 +612,14 @@ class Model:
           Owned by the host-side allocator (``repro.serving.kv_pool``),
           overwritten between steps without touching K/V bytes.
 
+        ``kv_dtype="int8"`` (paged only) allocates **quantized pages**:
+        the per-layer K/V buffers hold int8 codes and gain
+        ``k_scale``/``v_scale`` companions ((n_pages * page_size, Hkv)
+        f32, one scale per token row per kv head — see
+        ``repro.quant.kv_int8``).  Bytes per page drop from
+        ``2·L·ps·Hkv·D·4`` to ``2·L·ps·Hkv·(D + 4)`` — the capacity
+        lever ``serving.kv_pool.KVPoolConfig.page_bytes`` accounts for.
+
         Per-slot lengths are host state (the scheduler's), passed into
         each call as the position vector — the paged cache carries no
         device-side length array.
@@ -574,6 +629,9 @@ class Model:
         with no shape change, hence no recompilation.
         """
         cfg = self.cfg
+        if kv_dtype != "fp32" and page_size is None:
+            raise ValueError("kv_dtype applies to the paged cache only "
+                             "(pass page_size=...)")
         if page_size is not None:
             if not (self.uniform and self.kinds[0] == "attn"
                     and not self.decoder_cross and not cfg.cross_attn_every):
@@ -584,14 +642,29 @@ class Model:
             if n_pages is None:
                 n_pages = 1 + batch * max_pages   # page 0 is scratch
             hd = cfg.resolved_head_dim
+            rows = n_pages * page_size
+
+            def layer():
+                if kv_dtype == "int8":
+                    return {"self": {
+                        "k": jnp.zeros((rows, cfg.n_kv_heads, hd),
+                                       jnp.int8),
+                        "v": jnp.zeros((rows, cfg.n_kv_heads, hd),
+                                       jnp.int8),
+                        "k_scale": jnp.zeros((rows, cfg.n_kv_heads),
+                                             jnp.float32),
+                        "v_scale": jnp.zeros((rows, cfg.n_kv_heads),
+                                             jnp.float32)}}
+                if kv_dtype != "fp32":
+                    raise ValueError(f"kv_dtype={kv_dtype!r}: "
+                                     "choose 'fp32' or 'int8'")
+                return {"self": {
+                    "k": jnp.zeros((rows, cfg.n_kv_heads, hd), cfg.dtype),
+                    "v": jnp.zeros((rows, cfg.n_kv_heads, hd), cfg.dtype)}}
+
             return {
                 "block_tables": jnp.zeros((batch, max_pages), jnp.int32),
-                "layers": [{"self": {
-                    "k": jnp.zeros((n_pages * page_size, cfg.n_kv_heads,
-                                    hd), cfg.dtype),
-                    "v": jnp.zeros((n_pages * page_size, cfg.n_kv_heads,
-                                    hd), cfg.dtype)}}
-                    for _ in range(cfg.n_layers)],
+                "layers": [layer() for _ in range(cfg.n_layers)],
             }
         cl = min(cache_len or max_len, max_len)
         cache: Dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
@@ -815,7 +888,8 @@ class Model:
             _layer_forward, cfg, self.kinds[0], causal=True,
             single_step=single_step, moe_hook=self.moe_hook,
             decode_hook=self.decode_attn_hook,
-            act_constraint=self.attn_act_constraint, paged=paged)
+            act_constraint=self.attn_act_constraint, paged=paged,
+            qmm=self.qmm)
         layers = params["layers"]
         aux = jnp.zeros((), jnp.float32)
         new_caches: List = []

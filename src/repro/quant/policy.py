@@ -1,0 +1,176 @@
+"""Serving quantization policy (``--quant`` / ``--kv-dtype``).
+
+:class:`QuantPolicy` is the one knob the serving stack threads from the
+CLI down to the device layer (``EngineCore(quant=...)`` →
+``ModelRunner``): which weight format to serve (``weights``), which KV
+page format to allocate (``kv_dtype``), and how quantized matmuls
+dispatch (``impl`` — the ``repro.kernels.ops.q4_matmul`` rule: Pallas
+kernel on TPU, jnp dequant reference elsewhere).
+
+Weight quantization (``weights="q4"``) rewrites the attention and MLP
+projection leaves of the params tree to Q4_0 at load
+(:func:`quantize_serving_params`): each targeted ``(..., K, N)`` matrix
+becomes a ``{"q4_packed", "q4_scales"}`` subtree in place, quantized
+along the contraction axis K (padding K to the 32-row block exactly —
+see ``q4_0.quantize``).  Embedding, lm_head, norms and biases stay
+dense: they are a small fraction of the bytes and sit on the
+numerically touchy ends of the network.
+
+The model consumes quantized leaves through the ``qmm`` hook
+(:func:`make_qmm`), installed on the (local) model by ``ModelRunner``:
+a matmul that passes dense arrays straight to ``x @ w`` and routes
+quantized subtrees through ``kernels.ops.q4_matmul``.  Under
+tensor-parallel serving the q4 leaves shard exactly like the dense
+weights they replace — Q4_0 quantizes along K while the head split
+slices columns (N), so a column shard of the packed/scales pair is
+byte-identical to quantizing the sharded weight
+(``launch.shardings.serving_tp_param_specs``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .q4_0 import BLOCK, quantize, quantize_stacked
+
+#: projection leaves `quantize_serving_params` targets, under an
+#: ``attn`` / ``mlp`` parent (MoE expert stacks are excluded: their
+#: extra experts axis needs a different layout)
+Q4_WEIGHT_NAMES = ("w_q", "w_k", "w_v", "w_o", "w_gate", "w_up", "w_down")
+
+WEIGHT_FORMATS = ("none", "q4")
+KV_DTYPES = ("fp32", "int8")
+Q4_IMPLS = ("auto", "ref", "kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """What the serving engine quantizes and how it dispatches.
+
+    ``weights``   "none" | "q4"   — Q4_0-quantize attn/MLP projections
+                                    at load (4.5 bits/weight)
+    ``kv_dtype``  "fp32" | "int8" — KV page-pool element format
+                                    (int8 + per-(row, head) f32 scales)
+    ``impl``      "auto" | "ref" | "kernel" — q4 matmul dispatch;
+                  "auto" = Pallas kernel on TPU, jnp dequant reference
+                  fallback elsewhere (``kernels.ops.q4_matmul``)
+    ``min_size``  smallest element count a leaf must have to be
+                  quantized (tiny projections aren't worth the codes)
+    """
+
+    weights: str = "none"
+    kv_dtype: str = "fp32"
+    impl: str = "auto"
+    min_size: int = 1024
+
+    def __post_init__(self) -> None:
+        if self.weights not in WEIGHT_FORMATS:
+            raise ValueError(f"weights={self.weights!r}: "
+                             f"choose from {WEIGHT_FORMATS}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype={self.kv_dtype!r}: "
+                             f"choose from {KV_DTYPES}")
+        if self.impl not in Q4_IMPLS:
+            raise ValueError(f"impl={self.impl!r}: "
+                             f"choose from {Q4_IMPLS}")
+
+    @property
+    def active(self) -> bool:
+        return self.weights != "none" or self.kv_dtype != "fp32"
+
+
+def is_q4_leaf(w: Any) -> bool:
+    """True for a ``{"q4_packed", "q4_scales"}`` quantized-weight subtree."""
+    return isinstance(w, dict) and "q4_packed" in w
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def quantize_serving_params(params: Any, *, min_size: int = 1024) -> Any:
+    """Rewrite attn/MLP projection leaves to Q4_0 subtrees, in place in
+    the tree structure (each matched array leaf becomes a
+    ``{"q4_packed", "q4_scales"}`` dict; everything else is unchanged).
+
+    Matches by name (:data:`Q4_WEIGHT_NAMES`) under an ``attn`` or
+    ``mlp`` path component, on 2-D ``(K, N)`` or layer-stacked 3-D
+    ``(L, K, N)`` leaves of at least ``min_size`` elements.  K is
+    padded to the 32-row Q4_0 block when needed (exact — zero rows
+    dequantize to exact zeros; ``q4_0.quantize``).
+    """
+    def f(path, leaf):
+        p = _path_str(path)
+        parts = p.split("/")
+        if parts[-1] not in Q4_WEIGHT_NAMES:
+            return leaf
+        if "attn" not in parts and "mlp" not in parts:
+            return leaf
+        if not hasattr(leaf, "ndim") or leaf.ndim not in (2, 3):
+            return leaf
+        if leaf.size < min_size:
+            return leaf
+        qfn = quantize_stacked if leaf.ndim == 3 else quantize
+        packed, scales = qfn(leaf, pad=True)
+        return {"q4_packed": packed, "q4_scales": scales}
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def count_q4_leaves(params: Any) -> int:
+    """Number of quantized-weight subtrees in a params tree."""
+    n = 0
+    for path, _leaf in jax.tree_util.tree_leaves_with_path(params):
+        if _path_str(path).endswith("q4_packed"):
+            n += 1
+    return n
+
+
+def param_bytes(params: Any) -> int:
+    """Total bytes of every array leaf (dense and quantized alike)."""
+    return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(params)
+               if hasattr(leaf, "size"))
+
+
+def _largest_divisor_block(n: int, cap: int) -> int:
+    """Largest power-of-two multiple-of-32 tile <= cap dividing n, for
+    the Pallas kernel's grid (any n: falls back to n itself)."""
+    for b in (cap, cap // 2, cap // 4, cap // 8, 64, 32):
+        if b and b <= cap and n % b == 0:
+            return b
+    return n
+
+
+def make_qmm(impl: str = "auto"):
+    """Build the model's quantized-matmul hook (``Model.qmm``).
+
+    The returned ``qmm(x, w)`` computes ``x @ w`` for dense ``w`` and
+    dispatches Q4_0 subtrees through ``kernels.ops.q4_matmul`` with the
+    given ``impl``, handling leading batch dims and the pad-to-block K
+    mismatch (activations zero-pad to the packed row count — exact,
+    because padded weight rows dequantize to exact zeros).
+    """
+    from ..kernels.ops import q4_matmul
+
+    def qmm(x: jax.Array, w: Any) -> jax.Array:
+        if not is_q4_leaf(w):
+            return x @ w
+        packed, scales = w["q4_packed"], w["q4_scales"]
+        K = x.shape[-1]
+        Kq = packed.shape[-2] * 2
+        N = packed.shape[-1]
+        x2 = x.reshape(-1, K)
+        if Kq > K:                       # pad-to-block (exact, see above)
+            x2 = jnp.pad(x2, ((0, 0), (0, Kq - K)))
+        out = q4_matmul(x2.astype(jnp.float32), packed, scales, impl=impl,
+                        block_k=_largest_divisor_block(Kq, 256),
+                        block_n=_largest_divisor_block(N, 256))
+        return out.reshape(x.shape[:-1] + (N,)).astype(x.dtype)
+
+    return qmm

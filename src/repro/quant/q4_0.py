@@ -29,11 +29,32 @@ BLOCK = 32
 BYTES_PER_WEIGHT = 4 / 8 + 2 / BLOCK  # 4-bit code + fp16 scale share
 
 
-def quantize(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """W (K, N) float -> (packed (K//2, N) uint8, scales (K//32, N) f32)."""
+def padded_k(K: int) -> int:
+    """Smallest multiple of ``BLOCK`` >= K (the pad-to-block row count)."""
+    return -(-K // BLOCK) * BLOCK
+
+
+def quantize(w: jax.Array, *, pad: bool = False,
+             ) -> Tuple[jax.Array, jax.Array]:
+    """W (K, N) float -> (packed (K//2, N) uint8, scales (K//32, N) f32).
+
+    ``pad=True`` accepts any K by zero-padding the contraction axis to
+    the next multiple of ``BLOCK``.  The pad is *exact*, not approximate:
+    a zero input quantizes to code 8 and dequantizes to ``(8 - 8)·d = 0``
+    for every possible block scale, so a matmul against the padded
+    weight (with the activation zero-padded to match, or the dequantized
+    weight sliced back to K rows) is bit-identical to the unpadded one.
+    Callers recover the original K from the activation they contract
+    with (see ``repro.quant.policy.make_qmm``).
+    """
     K, N = w.shape
     if K % BLOCK:
-        raise ValueError(f"K={K} not a multiple of {BLOCK}")
+        if not pad:
+            raise ValueError(f"K={K} not a multiple of {BLOCK} "
+                             "(pass pad=True for the pad-to-block path)")
+        w = jnp.pad(jnp.asarray(w, jnp.float32),
+                    ((0, padded_k(K) - K), (0, 0)))
+        K = padded_k(K)
     wf = jnp.asarray(w, jnp.float32).reshape(K // BLOCK, BLOCK, N)
     absmax = jnp.max(jnp.abs(wf), axis=1)                     # (K/32, N)
     imax = jnp.argmax(jnp.abs(wf), axis=1)
@@ -65,6 +86,17 @@ def dequantize(packed: jax.Array, scales: jax.Array,
     K = codes.shape[0]
     s = jnp.repeat(scales, BLOCK, axis=0)                     # (K, N)
     return (codes * s).astype(dtype)
+
+
+def quantize_stacked(w: jax.Array, *, pad: bool = False,
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-layer-stacked weights (L, K, N) -> ((L, K//2, N), (L, K//32, N)).
+
+    The uniform paged stacks keep layer parameters stacked on a leading
+    L axis (``Model._run_paged_layers`` slices one layer per step);
+    quantizing each layer independently keeps that static slice working
+    unchanged on the packed/scales pair."""
+    return jax.vmap(lambda x: quantize(x, pad=pad))(w)
 
 
 def quantize_params(params, *, min_size: int = 1024):

@@ -115,11 +115,18 @@ class EngineCore:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = True,
                  window_override: Optional[int] = None,
-                 mesh=None, policy=None,
+                 mesh=None, policy=None, quant=None,
                  seed: int = 0, clock: Optional[Clock] = None,
                  registry: Optional[MetricsRegistry] = None,
                  tracer: Optional[RequestTracer] = None) -> None:
         cfg = model.cfg
+        # quantization policy (repro.quant.policy.QuantPolicy): decides
+        # the weight format the runner loads and the KV page dtype the
+        # pool sizes its bytes for.  None == full-precision serving.
+        if quant is None:
+            from ..quant.policy import QuantPolicy
+            quant = QuantPolicy()
+        self.quant = quant
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -149,7 +156,8 @@ class EngineCore:
             n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
             n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
             dtype_bytes=np.dtype(cfg.dtype).itemsize, n_nodes=n_nodes,
-            numa=numa, n_shards=n_shards), prefix_cache=prefix_cache)
+            numa=numa, n_shards=n_shards,
+            kv_dtype=quant.kv_dtype), prefix_cache=prefix_cache)
         self.pool.bind_registry(self.registry)
         self.scheduler = ContinuousScheduler(
             self.pool, max_running=max_running, max_len=max_len,
@@ -158,7 +166,7 @@ class EngineCore:
             model, params, max_running=max_running, max_len=max_len,
             page_size=page_size, n_pages=n_pages,
             window_override=window_override, mesh=mesh, policy=policy,
-            registry=self.registry, clock=self.clock)
+            quant=quant, registry=self.registry, clock=self.clock)
 
         self._meta: Dict[int, Dict[str, object]] = {}  # uid -> timing stamps
         self._t_last_decode: Optional[float] = None
@@ -216,6 +224,19 @@ class EngineCore:
                 "kv_pool.pages_retained",
                 "refcount-0 prefix pages parked in the retention LRU",
                 ).labels()
+            # static capacity facts, set once: together they let a
+            # dashboard derive pages-per-byte-budget, the quantity the
+            # int8 KV format (--kv-dtype int8) roughly doubles
+            reg.gauge(
+                "kv_pool.page_bytes",
+                "device bytes per KV page across all layers/heads under "
+                "the configured kv_dtype").labels(
+                    kv_dtype=quant.kv_dtype).set(
+                        float(self.pool.cfg.page_bytes))
+            reg.gauge(
+                "kv_pool.pages_total",
+                "total pages in the pool, scratch page 0 included",
+                ).labels().set(float(n_pages))
 
     # ------------------------------------------------------------------
     def _next_key(self) -> jax.Array:

@@ -99,11 +99,28 @@ class KVPoolConfig:
     #: page's bytes live 1/S on every shard (kv heads split S ways), so
     #: planning carves a per-(node, shard) region for every page
     n_shards: int = 1
+    #: KV page element format ("fp32" | "int8" — the engine's
+    #: ``--kv-dtype``).  "int8" pages hold 1-byte codes plus one f32
+    #: scale per (token row, kv head) (``repro.quant.kv_int8``), so a
+    #: token-head costs head_dim + 4 bytes instead of
+    #: head_dim * dtype_bytes — the same pool byte budget holds
+    #: ~dtype_bytes·D/(D+4) times the pages.  Page *accounting* (page
+    #: ids, refcounts, prefix map, CoW, block tables) is byte-agnostic;
+    #: only this byte arithmetic and the device buffers change.
+    kv_dtype: str = "fp32"
 
     @property
     def page_bytes(self) -> int:
+        if self.kv_dtype == "int8":
+            # int8 codes + one f32 scale per (token row, kv head)
+            per_row_head = self.head_dim + 4
+        elif self.kv_dtype == "fp32":
+            per_row_head = self.head_dim * self.dtype_bytes
+        else:
+            raise ValueError(f"kv_dtype={self.kv_dtype!r}: "
+                             "choose 'fp32' or 'int8'")
         return (2 * self.n_layers * self.page_size * self.n_kv_heads
-                * self.head_dim * self.dtype_bytes)
+                * per_row_head)
 
     @property
     def page_shard_bytes(self) -> int:

@@ -83,10 +83,24 @@ class ModelRunner:
                  window_override: Optional[int] = None,
                  mesh: Optional[Any] = None,
                  policy: Optional[Any] = None,
+                 quant: Optional[Any] = None,
                  registry: Optional[Any] = None,
                  clock: Optional[Any] = None) -> None:
+        from ..quant.policy import (QuantPolicy, make_qmm,
+                                    quantize_serving_params)
         self.model = model
         self.params = params
+        #: serving quantization policy (``repro.quant.QuantPolicy``):
+        #: Q4_0 weights are rewritten ONCE here at load — packed codes
+        #: and scales are what jit closes over and (in TP mode) what is
+        #: device_put per shard — and the model reads them through the
+        #: ``qmm`` hook; int8 KV pages are allocated by ``init_cache``
+        #: below and quantize/dequantize inside the compiled step.
+        self.quant = quant if quant is not None else QuantPolicy()
+        if self.quant.weights == "q4":
+            self.params = quantize_serving_params(
+                params, min_size=self.quant.min_size)
+            model.qmm = make_qmm(self.quant.impl)
         self.max_running = max_running
         self.max_len = max_len
         self.page_size = page_size
@@ -105,6 +119,7 @@ class ModelRunner:
         # under a VirtualClock record zeros deterministically.
         self._now = clock.now if clock is not None else time.perf_counter
         self._h_decode = self._h_prefill = None
+        self._c_q4_decode = self._c_q4_prefill = None
         if registry is not None:
             shards = str(self.tp_shards)
             self._h_decode = registry.histogram(
@@ -115,8 +130,19 @@ class ModelRunner:
                 "runner.prefill.dispatch_ms",
                 "prefill-chunk dispatch wall per call").labels(
                     shards=shards)
+            if self.quant.weights == "q4":
+                # dequant dispatch counters: each compiled forward under
+                # Q4_0 weights routes every projection through the
+                # dequantizing matmul, so count dispatches per phase
+                c = registry.counter(
+                    "runner.quant.q4_dispatch",
+                    "compiled forward dispatches whose projections ran "
+                    "through Q4_0 dequantizing matmuls")
+                self._c_q4_decode = c.labels(phase="decode")
+                self._c_q4_prefill = c.labels(phase="prefill")
         self.cache = model.init_cache(max_running, max_len,
-                                      page_size=page_size, n_pages=n_pages)
+                                      page_size=page_size, n_pages=n_pages,
+                                      kv_dtype=self.quant.kv_dtype)
         #: (padded chunk len, ctx page bucket) -> compiled prefill;
         #: ctx bucket 0 is the one-shot fresh-sequence path
         self._prefill_jits: Dict[Tuple[int, int], Any] = {}
@@ -168,6 +194,13 @@ class ModelRunner:
         self.local_model = Model(local_cfg)
         self.local_model.paged_head_merge = make_paged_head_merge(
             cfg.n_heads, S, axis=axis)
+        if self.quant.weights == "q4":
+            # the per-shard forward reads the same packed/scales leaves,
+            # sliced along their column (head) dim by the param specs —
+            # Q4_0 quantizes along K, so a column shard of the quantized
+            # pair is byte-identical to quantizing the sharded weight
+            from ..quant.policy import make_qmm
+            self.local_model.qmm = make_qmm(self.quant.impl)
 
         self._pspecs = serving_tp_param_specs(self.params, axis=axis)
         self._cspecs = paged_cache_specs(self.cache, axis=axis)
@@ -285,6 +318,8 @@ class ModelRunner:
                 jnp.asarray(start, jnp.int32))
         if self._h_prefill is not None:
             self._h_prefill.observe((self._now() - t0) * 1e3)
+        if self._c_q4_prefill is not None:
+            self._c_q4_prefill.inc()
         return logits
 
     def decode(self, fed: np.ndarray, pos: np.ndarray) -> jax.Array:
@@ -296,6 +331,8 @@ class ModelRunner:
             self.params, self.cache, jnp.asarray(fed), jnp.asarray(pos))
         if self._h_decode is not None:
             self._h_decode.observe((self._now() - t0) * 1e3)
+        if self._c_q4_decode is not None:
+            self._c_q4_decode.inc()
         return logits
 
 

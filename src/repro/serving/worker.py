@@ -60,6 +60,10 @@ def main(argv=None) -> int:
     ap.add_argument("--n-pages", type=int, default=None)
     ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--quant", choices=("none", "q4"), default="none",
+                    help="weight format (docs/quantization.md)")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8"),
+                    default="fp32", help="KV page format")
     ap.add_argument("--token-timeout", type=float, default=120.0)
     args = ap.parse_args(argv)
 
@@ -83,11 +87,15 @@ def main(argv=None) -> int:
     from .async_engine import AsyncEngine
     from .http import HttpFrontend
 
+    quant = None
+    if args.quant != "none" or args.kv_dtype != "fp32":
+        from ..quant.policy import QuantPolicy
+        quant = QuantPolicy(weights=args.quant, kv_dtype=args.kv_dtype)
     engine = AsyncEngine(
         model, params, max_len=args.max_len, max_running=args.max_running,
         page_size=args.page_size, n_pages=args.n_pages,
         prefill_chunk=args.prefill_chunk,
-        prefix_cache=not args.no_prefix_cache)
+        prefix_cache=not args.no_prefix_cache, quant=quant)
     fe = HttpFrontend(engine, tokenizer=ByteTokenizer(), host=args.host,
                       port=args.port, token_timeout=args.token_timeout)
     fe.start()

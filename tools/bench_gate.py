@@ -1,10 +1,10 @@
 """Bench-regression gate (``tools/check.sh --bench``).
 
 Runs the key ``benchmarks/serving_bench.py`` sections, writes
-``BENCH_PR7.json`` at the repo root, and compares the tracked metrics
+``BENCH_PR8.json`` at the repo root, and compares the tracked metrics
 against a baseline read *before* the write: the committed/previous
-``BENCH_PR7.json`` itself when present, else the newest other
-``BENCH_*.json`` (e.g. the PR 6 baseline).  Any metric that regresses
+``BENCH_PR8.json`` itself when present, else the newest other
+``BENCH_*.json`` (e.g. the PR 7 baseline).  Any metric that regresses
 more than the threshold (default 20%, knob: ``BENCH_REGRESSION_PCT``
 env var or ``--threshold``) fails the gate with a nonzero exit.
 
@@ -37,6 +37,16 @@ Tracked metrics (direction-aware):
                           (r2 rows are reported but not gated: on a
                           single-core host they measure scheduler
                           contention, not the stack)
+  quant_decode_tok_per_s  serving_quant --quant q4 --kv-dtype int8
+                          decode throughput (^) — the quantized path
+                          must not rot vs its own history
+  quant_token_match_rate  serving_quant teacher-forced greedy
+                          agreement vs fp32 (^) — the accuracy side of
+                          the quantization tradeoff, bounded below by
+                          QUANT_MATCH_BOUND inside the bench itself
+  kv_page_capacity_ratio  serving_quant int8-vs-fp32 pages at equal
+                          pool bytes (^) — the capacity side; the int8
+                          page format must keep fitting >= 1.9x
 
 A metric present in the current run but NOT in the baseline (a freshly
 landed bench, e.g. the first ``serving_tp.*`` run) is reported as
@@ -46,7 +56,7 @@ next baseline.  Metrics that vanished from the current run are
 reported as ``dropped`` the same way.
 
 Usage:
-  python tools/bench_gate.py run [--out BENCH_PR7.json] [--threshold 20]
+  python tools/bench_gate.py run [--out BENCH_PR8.json] [--threshold 20]
   python tools/bench_gate.py compare CURRENT.json BASELINE.json \
       [--threshold 20]
 
@@ -77,6 +87,12 @@ METRICS: Dict[str, Tuple[str, str]] = {
     "tp_decode_tok_per_s": ("serving_tp.decode_toks_per_s.s2", "higher"),
     "serving_obs_overhead_pct": ("serving_obs.overhead_pct", "lower"),
     "http_ttft_p50_ms": ("serving_http.ttft_p50_ms.r1", "lower"),
+    "quant_decode_tok_per_s": ("serving_quant.decode_toks_per_s.q4int8",
+                               "higher"),
+    "quant_token_match_rate": ("serving_quant.token_match_rate",
+                               "higher"),
+    "kv_page_capacity_ratio": ("serving_quant.page_capacity_ratio",
+                               "higher"),
 }
 
 
@@ -96,6 +112,7 @@ def collect() -> Dict[str, object]:
     rows += serving_bench.serving_scan_escape_rows()
     rows += serving_bench.serving_tp_rows()
     rows += serving_bench.serving_http_rows()
+    rows += serving_bench.serving_quant_rows()
     by_name = {name: derived for name, _us, derived in rows}
 
     metrics = {}
@@ -188,7 +205,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     run_p = sub.add_parser("run", help="run benches, write + compare")
-    run_p.add_argument("--out", default="BENCH_PR7.json")
+    run_p.add_argument("--out", default="BENCH_PR8.json")
     run_p.add_argument("--threshold", type=float, default=None,
                        help="regression threshold in percent")
     cmp_p = sub.add_parser("compare", help="compare two reports")

@@ -16,7 +16,7 @@
 #                             # warning when ruff is not installed)
 #   tools/check.sh --bench    # bench-regression gate: runs the key
 #                             # serving_bench sections, writes
-#                             # BENCH_PR7.json, fails on a >20%
+#                             # BENCH_PR8.json, fails on a >20%
 #                             # regression vs the newest BENCH_*.json
 #                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
@@ -114,6 +114,10 @@ python -m repro.launch.serve --arch qwen3-1.7b --engine async \
 echo "== serving smoke: bucket baseline parity path =="
 python -m repro.launch.serve --arch qwen3-1.7b --engine bucket \
     --max-new 8 --warmup-steps 0
+echo "== serving smoke: quantized path (q4 weights, int8 KV pages) =="
+python -m repro.launch.serve --arch qwen3-1.7b --engine async \
+    --quant q4 --kv-dtype int8 --max-new 8 --max-running 4 \
+    --page-size 8 --prefill-chunk 16 --warmup-steps 0
 echo "== serving smoke: tensor-parallel paged engine (2 shards) =="
 python -m repro.launch.serve --arch qwen3-1.7b --engine continuous \
     --tp-shards 2 --max-new 8 --max-running 4 --page-size 8 \
