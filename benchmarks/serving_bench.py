@@ -90,6 +90,14 @@ measures the oversubscription penalty instead — see
 :func:`serving_http_rows`), the prefix-affinity hit rate, and greedy
 parity vs an in-process ``AsyncEngine`` on the same prompts (the
 wire must be byte-invisible).
+
+The speculative section (``serving_spec.*``, see
+:func:`serving_spec_rows`) serves a shared-prefix repetitive-text
+Poisson workload with and without ``spec_decode=4`` on a bench-tiny
+warm-trained on periodic text: decode tok/s and ITL percentiles both
+ways, tokens emitted per lane-step (> 1.0 is the point — every extra
+token is a decode forward never run), the draft accept rate, and
+greedy byte parity vs k=0 (the acceptance contract).
 """
 
 from __future__ import annotations
@@ -1082,12 +1090,147 @@ def serving_quant_rows() -> List[Row]:
     ]
 
 
+def serving_spec_rows() -> List[Row]:
+    """Self-speculative decoding vs plain decode (``docs/serving.md``):
+    prompt-lookup drafts + batched paged verify through the SAME
+    continuous engine on a shared-prefix + repetitive-text Poisson
+    workload — the traffic shape speculation exists for.
+
+      serving_spec.decode_toks_per_s.k0 / .k4
+                         decode throughput without / with
+                         ``spec_decode=4`` on the same arrivals
+      serving_spec.itl_ms.p50.k0 / .k4  (and .p99.*)
+                         per-step inter-token latency percentiles from
+                         the engines' ``serving.decode.itl_ms``
+                         histograms — a verify step costs more wall
+                         time than a decode step, but emits up to k+1
+                         tokens for it
+      serving_spec.tokens_per_step.k0 / .k4
+                         tokens emitted per lane per decode/verify
+                         step (``serving.tokens.decode`` over the
+                         occupancy histogram's lane-step sum) — 1.0 by
+                         construction at k=0; > 1.0 is the point of
+                         speculation: every extra token is a decode
+                         forward the device never ran
+      serving_spec.accept_rate
+                         accepted / drafted draft tokens over the run
+      serving_spec.speedup
+                         k4 / k0 decode tok/s
+      serving_spec.greedy_parity
+                         OK when the k=4 token streams are
+                         byte-identical to k=0 — the acceptance
+                         contract (also asserted per-scenario in
+                         ``tests/test_spec_decode.py``)
+      serving_spec.budget
+                         OK when parity holds and
+                         tokens_per_step.k4 > 1.0
+
+    Warm-trained on PERIODIC text (fixed seed, deterministic): each
+    training row tiles a short random pattern, so the model learns to
+    continue repetitions — the induction behavior repetitive serving
+    traffic exercises and prompt-lookup drafting bets on.  On that
+    traffic the drafter's proposals match the model's own greedy
+    continuation, acceptance is high, and the verify step's extra cost
+    is paid back several tokens at a time.
+    """
+    from repro.serving import (ContinuousServingEngine, Request,
+                               SamplingParams, throughput_report)
+    from repro.training.loop import train
+    from repro.training.optimizer import AdamWConfig
+
+    model, params0, _reqs, _arr = _setup()
+    vocab = model.cfg.vocab_size
+    seq_len = 64
+
+    def periodic_batches(batch_size=8, seed=5):
+        prng = np.random.default_rng(seed)
+        while True:
+            rows = []
+            for _ in range(batch_size):
+                period = int(prng.integers(2, 5))
+                pat = prng.integers(1, vocab, size=period)
+                row = np.tile(pat, seq_len // period + 2)[:seq_len + 1]
+                rows.append(row)
+            chunk = np.stack(rows).astype(np.int32)
+            yield {"tokens": chunk[:, :-1], "labels": chunk[:, 1:]}
+
+    params, _, _ = train(model, params0, periodic_batches(),
+                         AdamWConfig(lr=2e-3, warmup_steps=5,
+                                     total_steps=80),
+                         steps=80, log_every=1000)
+
+    rng = np.random.default_rng(11)
+    system = list(rng.integers(1, 258, 8))      # shared prefix block
+    pats = [list(rng.integers(1, 258, 3)) for _ in range(4)]
+    reqs = []
+    for i in range(8):
+        body = pats[i % 4] * 6
+        reqs.append(Request(
+            uid=i, prompt=system + body[:14 + (i % 3)],
+            sampling=SamplingParams(max_new_tokens=24)))
+    arrivals = np.cumsum(rng.exponential(0.1, size=len(reqs))).tolist()
+    max_len = max(len(r.prompt) for r in reqs) + 24 + 8
+
+    def scrape(eng):
+        snap = eng.registry.snapshot()
+        hists = {h["name"]: h for h in snap["histograms"]}
+        counters = {c["name"]: c["value"] for c in snap["counters"]}
+        return (counters.get("serving.tokens.decode", 0.0),
+                hists["serving.batch.occupancy"]["sum"], counters,
+                hists["serving.decode.itl_ms"])
+
+    def run(k):
+        # warm the SAME engine the timed run uses: the verify step's
+        # compile (one per draft width) must not land inside the timed
+        # window — reqs[0] is repetitive, so a k>0 warmup drafts and
+        # compiles it
+        eng = ContinuousServingEngine(
+            model, params, max_len=max_len, max_running=8,
+            page_size=8, spec_decode=k)
+        eng.generate(reqs[:2])
+        tok0, lane0, _, _ = scrape(eng)
+        t0 = time.perf_counter()
+        comps = eng.generate(reqs, arrivals=arrivals)
+        wall = time.perf_counter() - t0
+        rep = throughput_report(
+            comps, wall_s=wall,
+            prefill_s=eng.last_phase_s["prefill_s"],
+            decode_s=wall - eng.last_phase_s["prefill_s"])
+        tok1, lane1, counters, itl = scrape(eng)    # run-scoped ITL
+        tps = (tok1 - tok0) / max(lane1 - lane0, 1.0)
+        return (comps, rep["decode_tok_per_s"], tps,
+                itl["p50"], itl["p99"], counters)
+
+    c0, toks0, tps0, p50_0, p99_0, _ = run(0)
+    c4, toks4, tps4, p50_4, p99_4, ctr = run(4)
+    parity = all(a.tokens == b.tokens for a, b in zip(c0, c4))
+    drafted = ctr.get("spec.drafted", 0.0)
+    rate = ctr.get("spec.accepted", 0.0) / max(drafted, 1.0)
+    return [
+        ("serving_spec.decode_toks_per_s.k0", 0.0, f"{toks0:.1f}"),
+        ("serving_spec.decode_toks_per_s.k4", 0.0, f"{toks4:.1f}"),
+        ("serving_spec.itl_ms.p50.k0", 0.0, f"{p50_0:.2f}"),
+        ("serving_spec.itl_ms.p50.k4", 0.0, f"{p50_4:.2f}"),
+        ("serving_spec.itl_ms.p99.k0", 0.0, f"{p99_0:.2f}"),
+        ("serving_spec.itl_ms.p99.k4", 0.0, f"{p99_4:.2f}"),
+        ("serving_spec.tokens_per_step.k0", 0.0, f"{tps0:.2f}"),
+        ("serving_spec.tokens_per_step.k4", 0.0, f"{tps4:.2f}"),
+        ("serving_spec.accept_rate", 0.0, f"{rate:.3f}"),
+        ("serving_spec.speedup", 0.0,
+         f"{toks4 / max(toks0, 1e-9):.2f}x"),
+        ("serving_spec.greedy_parity", 0.0,
+         "OK" if parity else "MISMATCH"),
+        ("serving_spec.budget", 0.0,
+         "OK" if tps4 > 1.0 and parity else "UNDER"),
+    ]
+
+
 def all_rows() -> List[Row]:
     return (serving_cb_rows() + serving_prefix_rows() +
             serving_chunk_rows() + serving_async_rows() +
             serving_obs_rows() + serving_scan_escape_rows() +
             serving_tp_rows() + serving_http_rows() +
-            serving_quant_rows())
+            serving_quant_rows() + serving_spec_rows())
 
 
 if __name__ == "__main__":

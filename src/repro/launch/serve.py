@@ -120,12 +120,18 @@ def _serve_replicated(args) -> int:
         worker_args += ["--quant", args.quant]
     if args.kv_dtype != "fp32":
         worker_args += ["--kv-dtype", args.kv_dtype]
-    sup = Supervisor(args.replicas, worker_args, host=args.host)
+    if args.spec_decode:
+        worker_args += ["--spec-decode", str(args.spec_decode)]
+    sup = Supervisor(args.replicas, worker_args, host=args.host,
+                     max_respawns=args.max_respawns)
     print(f"starting {args.replicas} engine workers "
           f"(--arch {args.arch}) ...", flush=True)
     clients = sup.start()
     router = Router(clients, page_size=args.page_size)
+    # the self-healing loop: death drains the replica from the ring;
+    # a successful respawn re-admits it (docs/serving.md)
     sup.on_death = lambda rid, rc: router.mark_dead(rid)
+    sup.on_respawn = lambda rid, client: router.readmit(rid, client)
     for rid, c in sorted(clients.items()):
         print(f"  worker {rid}: {c.describe()}", flush=True)
     fe = HttpFrontend(router, tokenizer=ByteTokenizer(), host=args.host,
@@ -186,6 +192,12 @@ def main() -> int:
                          "'int8' stores quantized pages with per-row "
                          "scales, fitting >=1.9x the pages in the same "
                          "pool bytes (docs/quantization.md)")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="continuous/async engines: self-speculative "
+                         "decoding — draft up to K tokens per step by "
+                         "prompt lookup and verify them in one batched "
+                         "forward; greedy output stays byte-identical "
+                         "to K=0 (docs/serving.md)")
     ap.add_argument("--tp-shards", type=int, default=1,
                     help="continuous/async engines: tensor-parallel "
                          "shards — forces that many host devices "
@@ -218,6 +230,10 @@ def main() -> int:
                     help="--http: engine-worker subprocesses behind a "
                          "prefix-affinity router (0 = serve the "
                          "in-process engine)")
+    ap.add_argument("--max-respawns", type=int, default=2,
+                    help="--replicas: restarts the supervisor grants "
+                         "each dead worker before it stays dead "
+                         "(0 disables self-healing)")
     args = ap.parse_args()
 
     if args.engine == "bucket" and (args.metrics_json or args.trace
@@ -228,8 +244,15 @@ def main() -> int:
                                     or args.kv_dtype != "fp32"):
         ap.error("--quant/--kv-dtype serve through the paged engines; "
                  "use --engine continuous or async")
+    if args.engine == "bucket" and args.spec_decode:
+        ap.error("--spec-decode serves through the paged engines; "
+                 "use --engine continuous or async")
+    if args.spec_decode < 0:
+        ap.error("--spec-decode must be >= 0")
     if args.replicas and not args.http:
         ap.error("--replicas needs --http")
+    if args.max_respawns < 0:
+        ap.error("--max-respawns must be >= 0")
     if args.http:
         if args.engine != "async":
             ap.error("--http serves through the async engine; add "
@@ -356,7 +379,8 @@ def main() -> int:
             max_running=args.max_running, page_size=args.page_size,
             n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
             prefix_cache=not args.no_prefix_cache, mesh=mesh,
-            n_nodes=max(args.tp_shards, 1), quant=quant, tracer=tracer)
+            n_nodes=max(args.tp_shards, 1), quant=quant,
+            spec_decode=args.spec_decode, tracer=tracer)
         if args.http:        # --replicas 0: in-process engine over HTTP
             from ..serving.http import HttpFrontend
             fe = HttpFrontend(eng, tokenizer=tok, host=args.host,
@@ -416,7 +440,8 @@ def main() -> int:
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk,
             prefix_cache=not args.no_prefix_cache, mesh=mesh,
-            n_nodes=max(args.tp_shards, 1), quant=quant, tracer=tracer)
+            n_nodes=max(args.tp_shards, 1), quant=quant,
+            spec_decode=args.spec_decode, tracer=tracer)
         comps = eng.generate(reqs)
         st = eng.pool.stats
         print(f"kv pool: {st['fresh_pages']} pages allocated, "

@@ -255,7 +255,30 @@ def _paged_attn(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
         new_cache["k_scale"] = cache["k_scale"].at[write_slots].set(sk_)
         new_cache["v_scale"] = cache["v_scale"].at[write_slots].set(sv_)
 
-    if S > 1:                                 # prefill: one sequence
+    if "verify" in paged:                # speculative multi-token verify
+        # Scatter ALL B*S fresh rows first (draft rows included) — the
+        # caller's write_slots already routes idle lanes and past-draft
+        # columns to the scratch page — then score each draft offset
+        # with the SAME decode kernel a sequential step would run:
+        # offset s attends with kv_len + s, exactly the rows visible to
+        # a non-speculative decode at that position, so the per-position
+        # logits (and hence greedy acceptance) are bitwise-identical to
+        # plain decode.  Window masking, softcap and int8 page dequant
+        # all ride through the kernel unchanged.
+        Hkv, D = k.shape[2], k.shape[3]
+        write(k.reshape(B * S, Hkv, D), v.reshape(B * S, Hkv, D))
+        outs = []
+        for s in range(S):
+            kv_len_s = jnp.where(paged["kv_len"] > 0,
+                                 paged["kv_len"] + s, 0)
+            outs.append(paged_gqa_decode_attention(
+                q[:, s:s + 1], new_cache["k"], new_cache["v"],
+                paged["block_tables"], kv_len_s, window, page_size=ps,
+                softcap=cfg.attn_logit_softcap,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale")))
+        out = jnp.concatenate(outs, axis=1)
+    elif S > 1:                               # prefill: one sequence
         write(k[0], v[0])
         ck, cv = new_cache["k"], new_cache["v"]
         ctx = paged.get("prefill_ctx")
@@ -1174,6 +1197,58 @@ class Model:
         positions = safe_pos[:, None]                     # (B, 1) for RoPE
         x, new_layers, _ = self._run_paged_layers(
             params, x, positions, cache["layers"], single_step=True,
+            window_override=window_override, paged=paged)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        return self._logits(params, x), new_cache
+
+    def verify_step(self, params: Params, cache: Dict[str, Any],
+                    tokens: jax.Array, pos: jax.Array, n_fed: jax.Array, *,
+                    page_size: int,
+                    window_override: Optional[int] = None,
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Speculative multi-token verify against the paged cache.
+
+        ``tokens`` (B, S) feeds each lane its last sampled token plus up
+        to S - 1 draft tokens; ``pos`` (B,) is the absolute position of
+        column 0 (the last token's write position, as in decode;
+        ``pos[b] < 0`` marks an idle lane); ``n_fed`` (B,) is how many
+        leading columns of the lane are real (1 = plain decode riding
+        along, 1 + m = m draft tokens).  Columns past ``n_fed`` and idle
+        lanes write to the scratch page and their logits are garbage the
+        caller must ignore.
+
+        Returns logits (B, S, vocab): column j scores position
+        ``pos + j`` having seen exactly the context a sequential decode
+        would have — the attention read at offset j uses
+        ``kv_len = pos + 1 + j`` over rows this same call scattered —
+        so ``argmax(logits[b, j])`` equals the token a non-speculative
+        engine would emit after accepting the first j draft tokens.
+        That identity is the byte-parity guarantee of ``--spec-decode``.
+        """
+        pos = jnp.asarray(pos, jnp.int32)                 # (B,)
+        n_fed = jnp.asarray(n_fed, jnp.int32)             # (B,)
+        safe_pos = jnp.maximum(pos, 0)
+        x = jnp.take(params["embed"], tokens, axis=0)     # (B, S, d)
+        bt = cache["block_tables"]
+        B, S = tokens.shape
+        offs = jnp.arange(S, dtype=jnp.int32)[None, :]    # (1, S)
+        positions = safe_pos[:, None] + offs              # (B, S)
+        phys = bt[jnp.arange(B)[:, None], positions // page_size] \
+            * page_size + positions % page_size           # (B, S)
+        # scratch-route the same lanes decode does (idle slots) PLUS the
+        # columns past each lane's real feed — a lane drafting m < S - 1
+        # tokens has no page grant (and no token) for the tail columns
+        valid = (pos[:, None] >= 0) & (offs < n_fed[:, None])
+        write_slots = jnp.where(valid, phys,
+                                positions % page_size).reshape(B * S)
+        kv_len = jnp.maximum(pos + 1, 0)
+        paged = {"page_size": page_size, "write_slots": write_slots,
+                 "block_tables": bt, "kv_len": kv_len, "verify": True}
+        if self.paged_head_merge is not None:
+            paged["head_merge"] = self.paged_head_merge
+        x, new_layers, _ = self._run_paged_layers(
+            params, x, positions, cache["layers"], single_step=False,
             window_override=window_override, paged=paged)
         new_cache = dict(cache)
         new_cache["layers"] = new_layers

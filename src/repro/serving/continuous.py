@@ -33,7 +33,7 @@ class ContinuousServingEngine:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = True,
                  window_override: Optional[int] = None,
-                 mesh=None, policy=None, quant=None,
+                 mesh=None, policy=None, quant=None, spec_decode: int = 0,
                  seed: int = 0, clock: Optional[Clock] = None,
                  registry=None, tracer=None) -> None:
         self.core = EngineCore(
@@ -41,7 +41,8 @@ class ContinuousServingEngine:
             page_size=page_size, n_pages=n_pages, n_nodes=n_nodes,
             numa=numa, prefill_chunk=prefill_chunk,
             prefix_cache=prefix_cache, window_override=window_override,
-            mesh=mesh, policy=policy, quant=quant, seed=seed, clock=clock,
+            mesh=mesh, policy=policy, quant=quant,
+            spec_decode=spec_decode, seed=seed, clock=clock,
             registry=registry, tracer=tracer)
         self.decode_gaps_s: List[float] = []
         self.last_phase_s: Dict[str, float] = {}

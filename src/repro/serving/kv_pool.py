@@ -538,6 +538,47 @@ class KVCachePool:
         self.pending_copies.append((pid, dst))
         return True
 
+    def truncate_to(self, uid: int, n_tokens: int) -> int:
+        """Speculative-grant rollback: shrink ``uid``'s block table to
+        the pages covering ``n_tokens`` token slots, releasing every
+        trailing over-allocation.
+
+        The scheduler grows a speculating sequence's table for the
+        *worst-case* ``k`` draft tokens before the verify step; when the
+        model rejects part of the draft the tail pages were granted for
+        positions that will now never be written this round — this
+        returns them.  Refcount-aware exactly like :meth:`free`: each
+        dropped entry is one reference, a page only leaves the live set
+        at refcount 0, and a prefix-indexed page retires to the
+        retention LRU (bytes intact) rather than the free list.
+        Returns the number of references dropped (0 when the table
+        already fits — the all-accepted fast path).
+        """
+        table = self._pages.get(uid, [])
+        keep = self.cfg.pages_for(n_tokens)
+        dropped = 0
+        while len(table) > keep:
+            pid = table.pop()
+            if pid == 0:            # window-recycled scratch entry
+                continue
+            dropped += 1
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                del self._ref[pid]
+                if (self.retain and self.prefix is not None
+                        and self.prefix.is_indexed(pid)):
+                    self._retained[pid] = None
+                    continue
+                if self.prefix is not None:
+                    self.prefix.forget(pid)
+                self._free[self.mm.kv_page_node(pid)].append(pid)
+        if dropped and self.pending_copies:
+            # same rule as free(): a queued clone whose target just left
+            # the live set must not clobber the page's next owner
+            self.pending_copies = [(s, d) for s, d in self.pending_copies
+                                   if d in self._ref]
+        return dropped
+
     def release_below(self, uid: int, pos: int) -> int:
         """Sliding-window page recycling: drop ``uid``'s references to
         every page that is **fully** below token position ``pos`` (all

@@ -20,8 +20,14 @@ pages* — so routing is **prefix-affine**:
   (minimal, deterministic redistribution; property-tested in
   ``tests/test_router.py``);
 * unkeyed requests (no full block) fall back to **least-loaded with
-  power-of-two choices**: sample two live replicas, take the one with
-  fewer in-flight requests.
+  power-of-two choices**: sample two live replicas, take the less
+  loaded one.  Load is a TTL-cached scrape of each worker's
+  ``/metrics.json`` — queue depth first (``scheduler.queue_depth``),
+  then KV pressure (fewer ``kv_pool.pages_free``) — so a replica
+  drowning in long prompts loses ties even when its in-flight count
+  looks identical; when the scrape fails (worker mid-death, fake
+  clients without a metrics endpoint) the score falls back to the
+  router's own in-flight counts.
 
 Robustness semantics (the reason this layer exists at all):
 
@@ -129,16 +135,19 @@ class AffinityRing:
                    key=lambda rid: _mix64(key ^ _mix64(rid + 1)))
 
 
-def pick_least_loaded(live: List[int], inflight: Dict[int, int],
+def pick_least_loaded(live: List[int], load: Any,
                       rng: random.Random) -> int:
     """Power-of-two-choices fallback for unkeyed requests: sample two
-    live replicas, take the one with fewer in-flight requests (ties
-    break on id).  Only ever sees ``live``, so it cannot pick a dead
-    replica by construction."""
+    live replicas, take the one with the lower load score (ties break
+    on id).  ``load`` is either a dict of in-flight counts (the legacy
+    signal) or a callable ``rid -> sortable score`` (the router passes
+    its TTL-cached ``/metrics.json`` scrape).  Only ever sees ``live``,
+    so it cannot pick a dead replica by construction."""
     if not live:
         raise NoReplicasError("no live replicas")
+    score = load if callable(load) else (lambda r: load.get(r, 0))
     cands = rng.sample(live, 2) if len(live) >= 2 else list(live)
-    return min(cands, key=lambda r: (inflight.get(r, 0), r))
+    return min(cands, key=lambda r: (score(r), r))
 
 
 # ----------------------------------------------------------------------
@@ -218,6 +227,26 @@ class HttpWorkerClient:
         finally:
             conn.close()
 
+    def metrics(self, *, timeout: float = 0.5) -> Optional[Dict[str, Any]]:
+        """One ``/metrics.json`` snapshot (the worker registry's
+        ``snapshot()`` document), or None when the worker is
+        unreachable — the router's load signal treats None as
+        "fall back to in-flight counts".  The short default timeout
+        bounds how long a mid-death worker can stall the load probe."""
+        try:
+            conn = http.client.HTTPConnection(self.host, self.port,
+                                              timeout=timeout)
+            try:
+                conn.request("GET", "/metrics.json")
+                resp = conn.getresponse()
+                if resp.status != 200:
+                    return None
+                return json.loads(resp.read())
+            finally:
+                conn.close()
+        except (OSError, ValueError):
+            return None
+
     def healthy(self, *, timeout: float = 2.0) -> bool:
         try:
             conn = http.client.HTTPConnection(self.host, self.port,
@@ -268,7 +297,8 @@ class Router:
 
     def __init__(self, workers: Dict[int, Any], *, page_size: int = 16,
                  affinity_blocks: int = 2, timeout_s: float = 120.0,
-                 max_retries: int = 1, registry=None, seed: int = 0,
+                 max_retries: int = 1, load_ttl: float = 0.5,
+                 registry=None, seed: int = 0,
                  tokenizer: Any = None) -> None:
         if not workers:
             raise ValueError("router needs at least one replica")
@@ -278,6 +308,7 @@ class Router:
         self.affinity_blocks = affinity_blocks
         self.timeout_s = timeout_s
         self.max_retries = max_retries
+        self.load_ttl = load_ttl
         self.tokenizer = tokenizer
         self.ring = AffinityRing(self.workers)
         self.registry = registry if registry is not None \
@@ -289,6 +320,9 @@ class Router:
         self._alive = True
         self._dead: Dict[int, BaseException] = {}
         self._inflight: Dict[int, int] = {r: 0 for r in self.workers}
+        #: rid -> (expiry monotonic time, score) — the TTL cache in
+        #: front of the ``/metrics.json`` load scrape
+        self._load_cache: Dict[int, Tuple[float, Tuple]] = {}
         self._affinity_last: Dict[int, int] = {}    # key -> last replica
         self._threads: List[threading.Thread] = []
 
@@ -316,6 +350,12 @@ class Router:
         self._c_deaths = reg.counter(
             "router.replica_deaths",
             "replicas drained from the ring").labels()
+        self._c_readmits = reg.counter(
+            "router.readmissions",
+            "respawned replicas re-admitted to the ring").labels()
+        self._c_load_scrapes = reg.counter(
+            "router.load_scrapes",
+            "/metrics.json load probes issued (cache misses)").labels()
         self._g_live = reg.gauge(
             "router.replicas_live", "live replicas in the ring").labels()
         self._g_live.set(len(self.workers))
@@ -402,7 +442,30 @@ class Router:
             self._dead[rid] = (cause if cause is not None
                                else WorkerDiedError(f"replica {rid} died"))
             self.ring.remove(rid)
+            self._load_cache.pop(rid, None)
             self._c_deaths.inc()
+            self._g_live.set(len(self._live_locked()))
+        return True
+
+    def readmit(self, rid: int, client: Any = None) -> bool:
+        """Re-admit a respawned replica: fresh worker client, back in
+        the affinity ring (its old keyspace deterministically returns —
+        rendezvous hashing) and the least-loaded pool.  Inverse of
+        :meth:`mark_dead`; the launcher wires it to the supervisor's
+        ``on_respawn`` hook.  Idempotent on a live replica."""
+        with self._lock:
+            if rid not in self.workers:
+                return False
+            if client is not None:
+                self.workers[rid] = client
+            if rid not in self._dead:
+                return False
+            del self._dead[rid]
+            self.ring.add(rid)
+            self._inflight[rid] = 0
+            self._g_inf[rid].set(0)
+            self._load_cache.pop(rid, None)
+            self._c_readmits.inc()
             self._g_live.set(len(self._live_locked()))
         return True
 
@@ -436,6 +499,38 @@ class Router:
     def _live_locked(self) -> List[int]:
         return [r for r in sorted(self.workers) if r not in self._dead]
 
+    def _load_score(self, rid: int) -> Tuple:
+        """Load rank for the power-of-two fallback, lower = less
+        loaded: ``(queue depth, -free KV pages)`` scraped from the
+        worker's ``/metrics.json`` behind a ``load_ttl``-second cache
+        (two probes per unkeyed request at most once per TTL).  A
+        failed scrape — dead worker, fake client without a metrics
+        endpoint — scores by the router's own in-flight count, which
+        compares sanely against scraped scores (queued requests vs
+        dispatched requests, same scale)."""
+        now = time.monotonic()
+        hit = self._load_cache.get(rid)
+        if hit is not None and hit[0] > now:
+            return hit[1]
+        score: Optional[Tuple] = None
+        fn = getattr(self.workers[rid], "metrics", None)
+        if fn is not None:
+            self._c_load_scrapes.inc()
+            snap = fn()
+            if snap:
+                queue = free = None
+                for g in snap.get("gauges", ()):
+                    if g.get("name") == "scheduler.queue_depth":
+                        queue = (queue or 0.0) + float(g["value"])
+                    elif g.get("name") == "kv_pool.pages_free":
+                        free = (free or 0.0) + float(g["value"])
+                if queue is not None or free is not None:
+                    score = (queue or 0.0, -(free or 0.0))
+        if score is None:
+            score = (float(self._inflight.get(rid, 0)), 0.0)
+        self._load_cache[rid] = (now + self.load_ttl, score)
+        return score
+
     def affinity_key(self, prompt: List[int]) -> Optional[int]:
         return prefix_chain_key(prompt, self.page_size,
                                 max_blocks=self.affinity_blocks)
@@ -455,7 +550,7 @@ class Router:
                     self._c_hits.inc()
                 self._affinity_last[key] = rid
             else:
-                rid = pick_least_loaded(live, self._inflight, self._rng)
+                rid = pick_least_loaded(live, self._load_score, self._rng)
             self._inflight[rid] += 1
             self._g_inf[rid].set(self._inflight[rid])
             self._c_req[rid].inc()

@@ -118,8 +118,8 @@ class ModelRunner:
         # once; time comes from the engine's injected clock so tests
         # under a VirtualClock record zeros deterministically.
         self._now = clock.now if clock is not None else time.perf_counter
-        self._h_decode = self._h_prefill = None
-        self._c_q4_decode = self._c_q4_prefill = None
+        self._h_decode = self._h_prefill = self._h_verify = None
+        self._c_q4_decode = self._c_q4_prefill = self._c_q4_verify = None
         if registry is not None:
             shards = str(self.tp_shards)
             self._h_decode = registry.histogram(
@@ -129,6 +129,10 @@ class ModelRunner:
             self._h_prefill = registry.histogram(
                 "runner.prefill.dispatch_ms",
                 "prefill-chunk dispatch wall per call").labels(
+                    shards=shards)
+            self._h_verify = registry.histogram(
+                "runner.verify.dispatch_ms",
+                "speculative verify dispatch wall per call").labels(
                     shards=shards)
             if self.quant.weights == "q4":
                 # dequant dispatch counters: each compiled forward under
@@ -140,12 +144,16 @@ class ModelRunner:
                     "through Q4_0 dequantizing matmuls")
                 self._c_q4_decode = c.labels(phase="decode")
                 self._c_q4_prefill = c.labels(phase="prefill")
+                self._c_q4_verify = c.labels(phase="verify")
         self.cache = model.init_cache(max_running, max_len,
                                       page_size=page_size, n_pages=n_pages,
                                       kv_dtype=self.quant.kv_dtype)
         #: (padded chunk len, ctx page bucket) -> compiled prefill;
         #: ctx bucket 0 is the one-shot fresh-sequence path
         self._prefill_jits: Dict[Tuple[int, int], Any] = {}
+        #: feed width S -> compiled speculative verify (one per draft
+        #: lookahead the engine runs with — in practice a single entry)
+        self._verify_jits: Dict[int, Any] = {}
         if mesh is not None:
             self._init_tp(policy)
             return
@@ -275,6 +283,57 @@ class ModelRunner:
                       out_specs=(P(), self._cspecs), check_rep=False),
             donate_argnums=2)
         return self._prefill_jits[key]
+
+    def _verify_fn(self, S: int):
+        """Compiled speculative verify for feed width ``S`` (1 + max
+        draft tokens).  Same donation contract as decode — the cache
+        argument aliases in place — and in TP mode the same shard_map
+        wrapping: tokens / positions / feed counts are replicated data,
+        the pool stays head-sharded, one psum per layer."""
+        fn = self._verify_jits.get(S)
+        if fn is not None:
+            return fn
+        if self.mesh is None:
+            fn = jax.jit(
+                lambda p, c, t, pos, nf: self.model.verify_step(
+                    p, c, t, pos, nf, page_size=self.page_size,
+                    window_override=self.window_override),
+                donate_argnums=1)
+        else:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            ps, wo, local = self.page_size, self.window_override, \
+                self.local_model
+            fn = jax.jit(
+                shard_map(
+                    lambda p, c, t, pos, nf: local.verify_step(
+                        p, c, t, pos, nf, page_size=ps,
+                        window_override=wo),
+                    mesh=self.mesh,
+                    in_specs=(self._pspecs, self._cspecs, P(), P(), P()),
+                    out_specs=(P(), self._cspecs), check_rep=False),
+                donate_argnums=1)
+        self._verify_jits[S] = fn
+        return fn
+
+    def verify(self, fed: np.ndarray, pos: np.ndarray,
+               n_fed: np.ndarray) -> jax.Array:
+        """One batched speculative verify step: ``fed`` (max_running, S)
+        = last sampled token + up to S - 1 draft tokens per lane,
+        ``pos`` (max_running,) absolute position of column 0 (-1 = idle
+        slot), ``n_fed`` (max_running,) real leading columns per lane.
+        Returns (max_running, S, V) — column j's argmax is what plain
+        decode would emit after j accepted drafts (see
+        ``Model.verify_step``)."""
+        t0 = self._now() if self._h_verify is not None else 0.0
+        logits, self.cache = self._verify_fn(fed.shape[1])(
+            self.params, self.cache, jnp.asarray(fed), jnp.asarray(pos),
+            jnp.asarray(n_fed))
+        if self._h_verify is not None:
+            self._h_verify.observe((self._now() - t0) * 1e3)
+        if self._c_q4_verify is not None:
+            self._c_q4_verify.inc()
+        return logits
 
     def set_block_tables(self, tables: np.ndarray) -> None:
         """Upload the host (max_running, max_pages) block-table array

@@ -55,6 +55,7 @@ from collections import deque
 
 from .engine import Request
 from .kv_pool import KVCachePool
+from .spec import lookahead_for
 
 
 @dataclasses.dataclass(eq=False)    # identity semantics: a Sequence is
@@ -119,16 +120,24 @@ class ContinuousScheduler:
     def __init__(self, pool: KVCachePool, *, max_running: int,
                  max_len: int, policy: str = "fcfs",
                  prefill_chunk: Optional[int] = None,
+                 spec_lookahead: int = 0,
                  registry=None) -> None:
         if policy != "fcfs":
             raise ValueError(f"unknown policy {policy!r}")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if spec_lookahead < 0:
+            raise ValueError("spec_lookahead must be >= 0")
         self.pool = pool
         self.max_running = max_running
         self.max_len = max_len
         self.policy = policy
         self.prefill_chunk = prefill_chunk
+        #: worst-case speculative draft tokens per decode step
+        #: (``--spec-decode k``): the grow step below reserves pages for
+        #: all k possible extra writes up front; the engine returns
+        #: unused grants after a rejected draft (``pool.truncate_to``)
+        self.spec_lookahead = spec_lookahead
         self.waiting: Deque[Sequence] = deque()
         self.running: Dict[int, Sequence] = {}      # slot -> Sequence
         self._free_slots = list(range(max_running - 1, -1, -1))
@@ -279,10 +288,11 @@ class ContinuousScheduler:
             if seq in sched.prefills:       # reservation made at admission
                 continue
             hint = self._slot_node(slot)
-            while not (self.pool.grow(seq.uid, seq.next_pos + 1,
+            k_eff = (lookahead_for(seq, self.spec_lookahead, self.max_len)
+                     if self.spec_lookahead else 0)
+            while not (self.pool.grow(seq.uid, seq.next_pos + 1 + k_eff,
                                       node_hint=hint)
-                       and self.pool.ensure_writable(
-                           seq.uid, seq.next_pos - 1, node_hint=hint)):
+                       and self._writable_span(seq, k_eff, hint)):
                 victim = self._pick_victim(exclude=seq)
                 if victim is None:
                     raise RuntimeError(
@@ -299,6 +309,23 @@ class ContinuousScheduler:
             self._g_queue.set(len(self.waiting))
             self._g_running.set(len(self.running))
         return sched
+
+    def _writable_span(self, seq: Sequence, k_eff: int, hint: int) -> bool:
+        """Copy-on-write guard for this step's whole write span: plain
+        decode writes one row at ``next_pos - 1``; a speculating step
+        writes up to ``k_eff`` more (draft rows), which can cross into
+        the next page(s).  Clone every shared page the span touches.
+        A False mid-loop (pool dry) leaves earlier clones in place —
+        they are private refcount-1 pages the retry (or the preemption
+        the caller triggers) handles like any owned page."""
+        ps = self.pool.cfg.page_size
+        first = (seq.next_pos - 1) // ps
+        last = (seq.next_pos - 1 + k_eff) // ps
+        for li in range(first, last + 1):
+            if not self.pool.ensure_writable(seq.uid, li * ps,
+                                             node_hint=hint):
+                return False
+        return True
 
     # ------------------------------------------------------------------
     def _pick_victim(self, exclude: Sequence) -> Optional[Sequence]:

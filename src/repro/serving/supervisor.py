@@ -11,9 +11,16 @@ supervisor is live (crash, OOM-kill, the fault-injection tests'
 SIGKILL) fires ``on_death(rid, returncode)`` exactly once — the
 launcher wires that straight to ``Router.mark_dead`` so the dead
 replica drains from the affinity ring while its in-flight connections
-surface their own errors.  ``shutdown()`` is SIGTERM -> bounded wait ->
-SIGKILL, and the orphan-free guarantee (every child reaped) is what
-``tests/test_router.py`` asserts after the fault drills.
+surface their own errors.  With ``max_respawns > 0`` the monitor then
+**heals the fleet**: it respawns the dead replica (bounded attempts,
+linear backoff), waits out the fresh READY handshake, and fires
+``on_respawn(rid, client)`` — wired to :meth:`~repro.serving.router.
+Router.readmit`, which puts the replica back in the affinity ring.  A
+replica that keeps dying stays dead once its attempts are spent.
+``shutdown()`` is SIGTERM -> bounded wait -> SIGKILL, and the
+orphan-free guarantee (every child reaped, including pre-respawn
+corpses) is what ``tests/test_router.py`` asserts after the fault
+drills.
 """
 
 from __future__ import annotations
@@ -58,20 +65,32 @@ class Supervisor:
                  worker_args: Optional[List[str]] = None, *,
                  host: str = "127.0.0.1", ready_timeout: float = 180.0,
                  on_death: Optional[Callable[[int, int], None]] = None,
+                 max_respawns: int = 0, respawn_backoff: float = 0.5,
+                 on_respawn: Optional[
+                     Callable[[int, HttpWorkerClient], None]] = None,
                  ) -> None:
         if n_replicas < 1:
             raise ValueError("need at least one replica")
+        if max_respawns < 0:
+            raise ValueError("max_respawns must be >= 0")
         self.n_replicas = n_replicas
         self.worker_args = list(worker_args or [])
         self.host = host
         self.ready_timeout = ready_timeout
         self.on_death = on_death
+        #: restart budget *per replica*; 0 keeps the legacy
+        #: notify-only behaviour (dead replicas stay dead)
+        self.max_respawns = max_respawns
+        self.respawn_backoff = respawn_backoff
+        self.on_respawn = on_respawn
         self.procs: Dict[int, subprocess.Popen] = {}
         self.clients: Dict[int, HttpWorkerClient] = {}
         #: trailing stdout lines per worker, for death diagnostics
         self._tails: Dict[int, collections.deque] = {}
         self._lock = threading.Lock()
         self._notified: set = set()
+        self._respawns: Dict[int, int] = {}     # attempts burned per rid
+        self._retired: List[subprocess.Popen] = []  # pre-respawn corpses
         self._closing = False
         self._monitor: Optional[threading.Thread] = None
 
@@ -139,7 +158,9 @@ class Supervisor:
         while not self._closing:
             for rid, proc in list(self.procs.items()):
                 rc = proc.poll()
-                if rc is None or self.on_death is None:
+                if rc is None:
+                    continue
+                if self.on_death is None and self.max_respawns <= 0:
                     # no callback attached yet: stay un-notified so a
                     # late-bound callback still hears about this death
                     continue
@@ -147,8 +168,51 @@ class Supervisor:
                     if self._closing or rid in self._notified:
                         continue
                     self._notified.add(rid)
-                self.on_death(rid, rc)
+                if self.on_death is not None:
+                    self.on_death(rid, rc)
+                if self.max_respawns > 0:
+                    self._respawn_one(rid)
             time.sleep(0.05)
+
+    def _respawn_one(self, rid: int) -> None:
+        """Heal one dead replica: bounded attempts with linear backoff,
+        each a full spawn + READY handshake.  On success the fresh
+        client replaces ``clients[rid]``, ``on_respawn`` re-admits the
+        replica upstream, and the rid is un-notified so a *later* death
+        fires ``on_death`` again.  Attempts spent -> the replica stays
+        dead (rid stays notified, so the monitor stops retrying)."""
+        while True:
+            with self._lock:
+                if self._closing:
+                    return
+                if self._respawns.get(rid, 0) >= self.max_respawns:
+                    return          # budget spent: stays dead
+                self._respawns[rid] = self._respawns.get(rid, 0) + 1
+                attempt = self._respawns[rid]
+            time.sleep(self.respawn_backoff * attempt)
+            if self._closing:
+                return
+            # keep the corpse for shutdown() to close its pipe; it is
+            # already reaped (poll() returned), so no zombie risk
+            self._retired.append(self.procs[rid])
+            try:
+                self._spawn(rid)
+                port = self._await_ready(rid)
+            except WorkerStartupError:
+                continue            # attempt burned; back off and retry
+            client = HttpWorkerClient(self.host, port,
+                                      proc=self.procs[rid])
+            with self._lock:
+                self.clients[rid] = client
+                self._notified.discard(rid)
+            if self.on_respawn is not None:
+                self.on_respawn(rid, client)
+            return
+
+    def respawns(self) -> Dict[int, int]:
+        """Respawn attempts burned per replica (diagnostics/tests)."""
+        with self._lock:
+            return dict(self._respawns)
 
     def alive(self) -> Dict[int, bool]:
         return {rid: p.poll() is None for rid, p in self.procs.items()}
@@ -175,7 +239,7 @@ class Supervisor:
             except subprocess.TimeoutExpired:
                 proc.kill()
                 proc.wait()
-        for proc in self.procs.values():
+        for proc in (*self.procs.values(), *self._retired):
             if proc.stdout is not None:
                 proc.stdout.close()
         if self._monitor is not None:

@@ -64,6 +64,9 @@ def main(argv=None) -> int:
                     help="weight format (docs/quantization.md)")
     ap.add_argument("--kv-dtype", choices=("fp32", "int8"),
                     default="fp32", help="KV page format")
+    ap.add_argument("--spec-decode", type=int, default=0,
+                    help="self-speculative decoding lookahead k "
+                         "(0 disables; docs/serving.md)")
     ap.add_argument("--token-timeout", type=float, default=120.0)
     args = ap.parse_args(argv)
 
@@ -95,7 +98,8 @@ def main(argv=None) -> int:
         model, params, max_len=args.max_len, max_running=args.max_running,
         page_size=args.page_size, n_pages=args.n_pages,
         prefill_chunk=args.prefill_chunk,
-        prefix_cache=not args.no_prefix_cache, quant=quant)
+        prefix_cache=not args.no_prefix_cache, quant=quant,
+        spec_decode=args.spec_decode)
     fe = HttpFrontend(engine, tokenizer=ByteTokenizer(), host=args.host,
                       port=args.port, token_timeout=args.token_timeout)
     fe.start()

@@ -4,7 +4,8 @@ Re-exports the real ``hypothesis`` when it is installed (listed in
 ``requirements-dev.txt``).  When it is missing — minimal CI images,
 hermetic containers — a small deterministic fallback implements the
 strategy surface these tests actually use (``integers``, ``floats``,
-``sampled_from``, ``lists``, ``booleans``) by drawing ``max_examples``
+``sampled_from``, ``lists``, ``tuples``, ``booleans``) by drawing
+``max_examples``
 pseudo-random examples from a per-test fixed seed.  No shrinking, no
 database; strictly weaker than hypothesis, strictly stronger than
 skipping every property test.
@@ -53,6 +54,11 @@ except ImportError:
         @staticmethod
         def booleans():
             return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda rng: tuple(e.example_from(rng)
+                                               for e in elements))
 
         @staticmethod
         def sampled_from(elements):

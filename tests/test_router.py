@@ -109,6 +109,15 @@ class TestAffinityRing:
                for _ in range(20)]
         assert all(g == 1 for g in got)
 
+    def test_least_loaded_accepts_a_score_callable(self):
+        # the router passes its /metrics.json scrape as a callable;
+        # lower score wins regardless of what the tuple encodes
+        rng = random.Random(0)
+        score = {0: (3.0, -2.0), 1: (0.0, -9.0)}
+        got = [pick_least_loaded([0, 1], lambda r: score[r], rng)
+               for _ in range(20)]
+        assert all(g == 1 for g in got)
+
 
 class TestPrefixChainKey:
     def test_same_full_blocks_same_key_despite_tail(self):
@@ -287,6 +296,33 @@ class TestRouterFakeWorkers:
             r.result(h, timeout=1)
         r.shutdown()
 
+    def test_readmit_restores_a_drained_replica(self):
+        r = Router({0: FakeWorker(), 1: FakeWorker()}, page_size=16)
+        assert r.mark_dead(0)
+        assert r.health()["live"] == 1 and 0 not in r.ring
+        fresh = FakeWorker([42, 42])
+        assert r.readmit(0, fresh)
+        assert r.health()["live"] == 2 and 0 in r.ring
+        assert r.workers[0] is fresh
+        assert not r.readmit(0)         # idempotent on a live replica
+        assert not r.readmit(99)        # unknown rid
+        assert r.registry.get("router.readmissions").value() == 1
+        assert (r.registry.get("router.replicas_live").value() == 2)
+        r.shutdown()
+
+    def test_readmit_restores_the_original_keyspace(self):
+        # rendezvous hashing: the healed replica gets exactly its old
+        # keys back, so its re-warmed prefix pages are reachable again
+        workers = {i: FakeWorker() for i in range(3)}
+        r = Router(workers, page_size=16)
+        key = r.affinity_key(KEYED)
+        before = r.ring.pick(key)
+        r.mark_dead(before)
+        assert r.ring.pick(key) != before
+        r.readmit(before, FakeWorker())
+        assert r.ring.pick(key) == before
+        r.shutdown()
+
     def test_inflight_gauge_returns_to_zero(self):
         r = Router({0: FakeWorker()}, page_size=16)
         r.result(r.submit(_req(KEYED)), timeout=5)
@@ -297,6 +333,84 @@ class TestRouterFakeWorkers:
         live = [x for x in snap["gauges"]
                 if x["name"] == "router.replicas_live"]
         assert live[0]["value"] == 1
+        r.shutdown()
+
+
+# ----------------------------------------------------------------------
+# scraped load signal for the least-loaded fallback
+# ----------------------------------------------------------------------
+class MetricWorker(FakeWorker):
+    """FakeWorker that also serves a ``/metrics.json``-shaped snapshot
+    (the registry ``snapshot()`` document the real client fetches)."""
+
+    def __init__(self, *a, queue=0.0, free=0.0, **kw):
+        super().__init__(*a, **kw)
+        self.queue, self.free = queue, free
+        self.n_scrapes = 0
+
+    def metrics(self):
+        self.n_scrapes += 1
+        return {"gauges": [
+            {"name": "scheduler.queue_depth", "labels": {},
+             "value": self.queue},
+            {"name": "kv_pool.pages_free",
+             "labels": {"node": 0, "shard": 0}, "value": self.free},
+            {"name": "kv_pool.pages_free",
+             "labels": {"node": 1, "shard": 0}, "value": self.free},
+        ]}
+
+
+UNKEYED = [1, 2, 3]     # < one full block: least-loaded fallback
+
+
+class TestScrapedLoadSignal:
+    def _drive(self, workers, n=8, **kw):
+        r = Router(workers, page_size=16, **kw)
+        picks = []
+        for _ in range(n):
+            h = r.submit(_req(UNKEYED))
+            r.result(h, timeout=5)
+            picks.append(h.replica)
+        r.shutdown()
+        return picks
+
+    def test_prefers_the_shallower_queue(self):
+        # replica 0 reports a deep scheduler queue; every unkeyed
+        # request must land on 1 even though in-flight counts agree
+        workers = {0: MetricWorker(queue=5, free=100),
+                   1: MetricWorker(queue=0, free=100)}
+        assert set(self._drive(workers, load_ttl=0.0)) == {1}
+
+    def test_kv_pressure_breaks_queue_ties(self):
+        # equal queues: the replica with more free KV pages wins (it
+        # can admit a long prompt without preempting)
+        workers = {0: MetricWorker(queue=1, free=2),
+                   1: MetricWorker(queue=1, free=90)}
+        assert set(self._drive(workers, load_ttl=0.0)) == {1}
+
+    def test_scrapes_are_ttl_cached(self):
+        workers = {0: MetricWorker(free=10), 1: MetricWorker(free=10)}
+        self._drive(workers, n=6, load_ttl=60.0)
+        assert workers[0].n_scrapes == 1 and workers[1].n_scrapes == 1
+        workers = {0: MetricWorker(free=10), 1: MetricWorker(free=10)}
+        self._drive(workers, n=3, load_ttl=0.0)
+        assert workers[0].n_scrapes == 3 and workers[1].n_scrapes == 3
+
+    def test_falls_back_to_inflight_without_metrics(self):
+        # plain FakeWorkers have no metrics endpoint: the score
+        # degrades to the router's own in-flight counts and routing
+        # still works
+        workers = {0: FakeWorker(), 1: FakeWorker()}
+        picks = self._drive(workers, load_ttl=0.0)
+        assert all(p in (0, 1) for p in picks)
+
+    def test_mark_dead_drops_the_cached_score(self):
+        r = Router({0: MetricWorker(), 1: MetricWorker()}, page_size=16,
+                   load_ttl=60.0)
+        r._load_score(0)
+        assert 0 in r._load_cache
+        r.mark_dead(0)
+        assert 0 not in r._load_cache
         r.shutdown()
 
 
@@ -361,6 +475,55 @@ class TestWorkerFleetFaults:
         # no orphan subprocesses after shutdown()
         assert all(not alive for alive in sup.alive().values())
         assert all(p.poll() is not None for p in sup.procs.values())
+
+    def test_sigkill_respawn_heals_the_fleet(self):
+        # self-healing: SIGKILL a worker; the supervisor respawns it
+        # (bounded budget), the router re-admits it to the ring, and
+        # the healed replica serves its old keyspace again.  A second
+        # kill exhausts the budget: the replica stays dead.
+        from repro.serving import Router, Supervisor
+        sup = Supervisor(2, ["--arch", "tiny"], max_respawns=1,
+                         respawn_backoff=0.05)
+        clients = sup.start()
+        router = Router(clients, page_size=16)
+        sup.on_death = lambda rid, rc: router.mark_dead(rid)
+        sup.on_respawn = lambda rid, c: router.readmit(rid, c)
+        try:
+            victim = router.ring.pick(router.affinity_key(KEYED))
+            old_proc = sup.procs[victim]
+            sup.kill(victim)
+            t0 = time.time()        # death noticed, then healed
+            while ((sup.respawns().get(victim) != 1
+                    or router.health()["live"] < 2)
+                   and time.time() - t0 < 120):
+                time.sleep(0.05)
+            assert router.health()["live"] == 2, "fleet never healed"
+            assert victim in router.ring
+            assert sup.procs[victim] is not old_proc
+            assert sup.alive()[victim]
+            assert sup.respawns() == {victim: 1}
+
+            # the healed replica serves its old keyspace over the wire
+            h = router.submit(_req(KEYED, max_new=3))
+            assert len(router.result(h, timeout=120).tokens) == 3
+            assert h.replica == victim
+            assert (router.registry.get("router.readmissions").value()
+                    == 1)
+
+            # budget spent: the second death stays dead
+            sup.kill(victim)
+            t0 = time.time()
+            while router.health()["live"] > 1 and time.time() - t0 < 120:
+                time.sleep(0.05)
+            time.sleep(0.5)     # give a (buggy) respawn time to appear
+            assert router.health()["live"] == 1
+            assert not sup.alive()[victim]
+            assert sup.respawns() == {victim: 1}
+        finally:
+            router.shutdown()
+            sup.shutdown()
+        assert all(p.poll() is not None for p in sup.procs.values())
+        assert all(p.poll() is not None for p in sup._retired)
 
     def test_full_http_stack_greedy_parity(self):
         # the acceptance gate: greedy tokens over router + worker

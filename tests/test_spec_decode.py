@@ -1,0 +1,342 @@
+"""Self-speculative decoding (PR: prompt-lookup drafts + paged verify).
+
+Three layers, mirroring the subsystem:
+
+* **Drafter properties** (fast, no jax): every proposal is a
+  contiguous slice of the sequence's own history, capped at ``k``;
+  the lookahead clamp respects prefill state, sampling temperature
+  and the remaining token budget.
+* **Rollback invariants** (property tests, satellite of the PR):
+  :meth:`~repro.serving.kv_pool.KVCachePool.truncate_to` under
+  arbitrary accept/reject patterns — refcounts, free lists, retention
+  LRU and ``pending_copies`` exact, including mid-page rejection on
+  shared (copy-on-write) pages.
+* **Byte parity** (the acceptance gate): greedy tokens with
+  ``spec_decode=k`` byte-identical to ``k=0`` across plain,
+  shared-prefix, mid-page-CoW, chunked-prefill and forced-preemption
+  runs — speculation may only change *when* tokens are computed,
+  never *which*.
+"""
+
+import types
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving import (ContinuousServingEngine, KVCachePool,
+                           KVPoolConfig, Request, SamplingParams,
+                           VirtualClock)
+from repro.serving.spec import MAX_NGRAM, lookahead_for, propose
+
+
+# ----------------------------------------------------------------------
+# drafter properties (no jax)
+# ----------------------------------------------------------------------
+def _seq(next_pos=10, n_generated=2, *, prefilling=False,
+         temperature=0.0, max_new=64):
+    """Minimal Sequence stand-in for ``lookahead_for``."""
+    return types.SimpleNamespace(
+        next_pos=next_pos, generated=[7] * n_generated,
+        is_prefilling=prefilling,
+        request=types.SimpleNamespace(sampling=SamplingParams(
+            temperature=temperature, max_new_tokens=max_new)))
+
+
+class TestPropose:
+    def test_repeated_ngram_proposes_its_continuation(self):
+        # suffix [1, 2, 3] recurs at the front; the draft replays what
+        # followed it there
+        assert propose([1, 2, 3, 4, 1, 2, 3], 2) == [4, 1]
+
+    def test_most_recent_occurrence_wins(self):
+        # [1, 2] appears twice; the later (more recent) continuation
+        # is the better guess for the current regime
+        ctx = [1, 2, 9, 5, 1, 2, 8, 5, 1, 2]
+        assert propose(ctx, 1) == [8]
+
+    def test_longer_ngrams_beat_shorter_ones(self):
+        # a 3-gram match exists and must win over the 1-gram match
+        # that points somewhere else
+        ctx = [5, 1, 2, 3, 7, 7, 3, 1, 2, 3]
+        assert propose(ctx, 1) == [7]
+
+    def test_no_repetition_no_draft(self):
+        assert propose(list(range(20)), 4) == []
+
+    def test_degenerate_inputs(self):
+        assert propose([], 4) == []
+        assert propose([1], 4) == []
+        assert propose([1, 2, 3], 0) == []
+        assert propose([1, 2, 3], -1) == []
+
+    @given(ctx=st.lists(st.integers(0, 3), max_size=40),
+           k=st.integers(1, 6))
+    @settings(max_examples=60, deadline=None)
+    def test_draft_is_a_contiguous_slice_of_history(self, ctx, k):
+        d = propose(ctx, k)
+        assert len(d) <= k
+        if d:
+            # the draft was copied verbatim from somewhere in history
+            assert any(ctx[i:i + len(d)] == d
+                       for i in range(len(ctx) - len(d) + 1))
+            # and the matched n-gram really is the current suffix
+            for size in range(MAX_NGRAM, 0, -1):
+                if len(ctx) > size and any(
+                        ctx[i:i + size] == ctx[-size:]
+                        for i in range(len(ctx) - size)):
+                    break
+            else:
+                pytest.fail("draft without a repeated suffix n-gram")
+
+
+class TestLookahead:
+    def test_clamps_to_k(self):
+        assert lookahead_for(_seq(), 4, max_len=100) == 4
+
+    def test_zero_during_prefill(self):
+        assert lookahead_for(_seq(prefilling=True), 4, max_len=100) == 0
+
+    def test_zero_when_sampling(self):
+        # byte parity is a greedy contract; sampled lanes never draft
+        assert lookahead_for(_seq(temperature=0.7), 4, max_len=100) == 0
+
+    def test_clamps_to_max_len(self):
+        # next_pos 10: verify writes positions 10..10+k, all < max_len
+        assert lookahead_for(_seq(next_pos=10), 8, max_len=13) == 2
+
+    def test_clamps_to_token_budget(self):
+        # 2 generated of max_new 4: at most 2 more tokens, one of which
+        # the verify step's bonus token covers
+        assert lookahead_for(_seq(n_generated=2, max_new=4), 8,
+                             max_len=100) == 1
+
+    def test_never_negative(self):
+        assert lookahead_for(_seq(n_generated=63, max_new=64), 4,
+                             max_len=100) == 0
+
+
+# ----------------------------------------------------------------------
+# rollback invariants (truncate_to property tests)
+# ----------------------------------------------------------------------
+def _pool(n_pages=17, page_size=4, **kw):
+    return KVCachePool(KVPoolConfig(
+        n_pages=n_pages, page_size=page_size, n_layers=2, n_kv_heads=2,
+        head_dim=8, dtype_bytes=4), **kw)
+
+
+USABLE = 16     # _pool default: n_pages - 1
+
+
+class TestTruncateRollback:
+    @given(rounds=st.lists(st.tuples(st.integers(0, 4),
+                                     st.integers(0, 4)),
+                           min_size=1, max_size=30))
+    @settings(max_examples=40, deadline=None)
+    def test_arbitrary_accept_reject_patterns(self, rounds):
+        """Each round mimics one speculative step: grow for the
+        worst-case k, the verify accepts a <= k, truncate to the real
+        frontier.  The table must cover exactly the accepted tokens and
+        page accounting must conserve after every round."""
+        pool = _pool(n_pages=33, prefix_cache=False)
+        n = 5
+        assert pool.grow(0, n)
+        for k, a in rounds:
+            a = min(a, k)
+            if not pool.grow(0, n + 1 + k):
+                break                       # pool dry: scheduler's problem
+            n += 1 + a                      # bonus token + accepted draft
+            pool.truncate_to(0, n)
+            table = pool.block_table(0)
+            assert len(table) == pool.cfg.pages_for(n)
+            assert all(pool.refcount(p) == 1 for p in table)
+            assert 0 not in table
+            # conservation: live + free + retained == usable pages
+            assert pool.n_live() + pool.n_free() == 32
+
+    def test_truncate_is_the_exact_inverse_of_overgrow(self):
+        pool = _pool()
+        assert pool.grow(0, 6)
+        before = (pool.block_table(0), pool.n_free())
+        assert pool.grow(0, 6 + 5)          # worst-case k=4 + bonus
+        assert pool.truncate_to(0, 6) == 1  # the page-3 grant returns
+        assert (pool.block_table(0), pool.n_free()) == before
+        assert pool.truncate_to(0, 6) == 0  # all-accepted fast path
+
+    def test_freed_pages_are_immediately_reusable(self):
+        pool = _pool(n_pages=5)             # 4 usable pages
+        assert pool.grow(0, 4)
+        assert pool.grow(0, 16)             # speculative worst case
+        assert pool.n_free() == 0
+        pool.truncate_to(0, 4)
+        assert pool.grow(1, 12)             # another sequence takes them
+
+    def test_shared_prefix_pages_keep_their_other_owner(self):
+        # A's registered prompt pages are shared into B; B's rollback
+        # below the shared span drops *references*, never A's bytes
+        pool = _pool()
+        prompt = list(range(8))
+        assert pool.grow(0, 8)
+        pool.register_prefix(0, prompt)
+        m = pool.match_prefix(prompt + [99])
+        assert m.pages and pool.adopt_prefix(1, m)
+        shared = pool.block_table(1)
+        assert all(pool.refcount(p) == 2 for p in shared)
+        assert pool.grow(1, 8 + 5)          # speculative span
+        pool.truncate_to(1, 4)              # reject below the share
+        assert pool.block_table(1) == [shared[0]]
+        assert pool.refcount(shared[0]) == 2
+        assert pool.block_table(0) == list(shared) + \
+            [p for p in pool.block_table(0) if p not in shared]
+        assert all(pool.refcount(p) >= 1 for p in pool.block_table(0))
+
+    def test_midpage_rejection_on_cow_pages_drops_the_queued_copy(self):
+        # B diverges from A's cached prompt mid-page: adoption queues a
+        # (src, dst) device copy for the CoW clone.  A rollback that
+        # drops the clone before the engine applied the copy must also
+        # drop the queued copy — the page's next owner is not a clone
+        # target.
+        pool = _pool()
+        a_prompt = list(range(8))           # two full pages
+        assert pool.grow(0, 8)
+        pool.register_prefix(0, a_prompt)
+        b_prompt = a_prompt[:6] + [77, 78]  # diverges inside page 2
+        m = pool.match_prefix(b_prompt)
+        assert m.cow_src is not None and m.cow_len == 2
+        assert pool.adopt_prefix(1, m)
+        clone = pool.block_table(1)[-1]
+        assert pool.pending_copies == [(m.cow_src, clone)]
+        assert pool.truncate_to(1, 4) == 1  # mid-page rejection: clone dies
+        assert pool.pending_copies == []
+        assert pool.refcount(clone) == 0
+        assert pool.refcount(m.cow_src) == 1    # A still owns the source
+
+    def test_cow_write_guard_then_rollback_restores_sharing(self):
+        # the scheduler CoWs the speculative span's pages before the
+        # verify write; rejecting everything afterwards must return the
+        # private clone and leave the original share intact
+        pool = _pool()
+        prompt = list(range(4))
+        assert pool.grow(0, 4)
+        pool.register_prefix(0, prompt)
+        pool.share_pages(1, pool.block_table(0))
+        shared = pool.block_table(1)[0]
+        free0 = pool.n_free()
+        assert pool.ensure_writable(1, 0)
+        clone = pool.block_table(1)[0]
+        assert clone != shared and pool.pending_copies
+        pool.truncate_to(1, 0)
+        assert pool.pending_copies == []
+        assert pool.refcount(shared) == 1 and pool.n_free() == free0
+
+    def test_prefix_indexed_pages_retire_to_retention_not_free(self):
+        # a rolled-back page whose bytes index a cached prefix keeps
+        # them resident (retention LRU), exactly like free()
+        pool = _pool()
+        prompt = list(range(8))
+        assert pool.grow(0, 8)
+        pool.register_prefix(0, prompt)
+        free0 = pool.n_free()
+        retained0 = pool.n_retained()
+        assert pool.truncate_to(0, 4) == 1
+        assert pool.n_retained() == retained0 + 1
+        assert pool.n_free() == free0 + 1   # retained still allocatable
+        # ... and a repeat prompt still hits the retained page
+        m = pool.match_prefix(prompt + [5])
+        assert m.n_tokens >= 4
+
+
+# ----------------------------------------------------------------------
+# byte parity (the acceptance gate)
+# ----------------------------------------------------------------------
+def _tiny():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import ModelConfig, build_model
+    cfg = ModelConfig(name="spec-tiny", arch_type="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=67, dtype=jnp.float32)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+#: repetitive prompts so prompt-lookup actually drafts (and greedy
+#: continuations of an untrained model still reject most of them —
+#: both sides of accept/rollback run)
+REP = [[7, 8, 9, 7, 8, 9, 7, 8], [3, 4, 3, 4, 3, 4, 3, 4, 3],
+       [5, 6, 7, 5, 6, 7, 5, 6, 7, 5]]
+
+
+def _generate(model, params, prompts, k, *, max_new=12, **kw):
+    eng = ContinuousServingEngine(model, params, spec_decode=k,
+                                  clock=VirtualClock(), **kw)
+    reqs = [Request(uid=i, prompt=list(p),
+                    sampling=SamplingParams(max_new_tokens=max_new))
+            for i, p in enumerate(prompts)]
+    comps = eng.generate(reqs)
+    return [c.tokens for c in comps], eng
+
+
+class TestGreedyByteParity:
+    def _assert_parity(self, prompts, *, max_new=12, **kw):
+        model, params = _tiny()
+        base, _ = _generate(model, params, prompts, 0, max_new=max_new,
+                            **kw)
+        for k in (2, 4):
+            spec, eng = _generate(model, params, prompts, k,
+                                  max_new=max_new, **kw)
+            assert spec == base, f"k={k} diverged from k=0"
+        return eng
+
+    def test_plain_decode(self):
+        eng = self._assert_parity(REP, max_len=64, page_size=4)
+        reg = eng.registry
+        assert reg.get("spec.drafted").value() > 0
+        assert (reg.get("spec.accepted").value()
+                + reg.get("spec.rollbacks").value()) > 0
+
+    def test_shared_prefix_and_midpage_cow(self):
+        # one full shared page + mid-page divergence: adoption, CoW
+        # clones and speculative writes all on the same pages
+        base = [1, 2, 3, 4, 1, 2]
+        prompts = [base + [3, 4, 1, 2], base + [9, 9, 1, 2],
+                   base + [3, 4, 1, 9]]
+        self._assert_parity(prompts, max_len=64, page_size=4)
+
+    def test_chunked_prefill(self):
+        self._assert_parity(REP, max_len=64, page_size=4,
+                            prefill_chunk=4)
+
+    @pytest.mark.slow
+    def test_forced_preemption(self):
+        # a pool too small for three sequences' worst-case speculative
+        # spans: grows fail, victims recompute — order changes, bytes
+        # must not
+        self._assert_parity(REP, max_len=64, page_size=4, n_pages=13,
+                            max_running=3)
+
+    @pytest.mark.slow
+    def test_eos_inside_an_accepted_draft(self):
+        # eos_id equal to a drafted token: the engine must stop at the
+        # accepted EOS exactly where sequential decode would
+        model, params = _tiny()
+        # pick an EOS the greedy continuation first emits mid-sequence,
+        # so a draft can carry tokens past it that must be discarded
+        base, _ = _generate(model, params, REP[:1], 0, max_new=8,
+                            max_len=64, page_size=4)
+        idx, eos = next(((i, t) for i, t in enumerate(base[0])
+                         if i >= 1 and t not in base[0][:i]),
+                        (None, None))
+        if idx is None:
+            pytest.skip("greedy continuation has no late-first token")
+        reqs = [Request(uid=0, prompt=list(REP[0]),
+                        sampling=SamplingParams(max_new_tokens=8,
+                                                eos_id=int(eos)))]
+        outs = []
+        for k in (0, 4):
+            eng = ContinuousServingEngine(
+                model, params, spec_decode=k, clock=VirtualClock(),
+                max_len=64, page_size=4)
+            outs.append([c.tokens for c in eng.generate(reqs)])
+        assert outs[0] == outs[1]
+        assert outs[0][0][-1] == eos and len(outs[0][0]) == idx + 1

@@ -16,7 +16,7 @@
 #                             # warning when ruff is not installed)
 #   tools/check.sh --bench    # bench-regression gate: runs the key
 #                             # serving_bench sections, writes
-#                             # BENCH_PR8.json, fails on a >20%
+#                             # BENCH_PR9.json, fails on a >20%
 #                             # regression vs the newest BENCH_*.json
 #                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
@@ -132,6 +132,13 @@ python -m repro.launch.serve --arch qwen3-1.7b --engine async \
 python -m repro.obs.validate --metrics "$OBS_TMP/metrics.json" \
     --trace "$OBS_TMP/trace.jsonl" \
     --require-gauge kv_pool.pages_free:node,shard
+echo "== serving smoke: self-speculative decoding (async, k=4) =="
+python -m repro.launch.serve --arch qwen3-1.7b --engine async \
+    --spec-decode 4 --max-new 8 --max-running 4 --page-size 8 \
+    --prefill-chunk 16 --warmup-steps 0 \
+    --metrics-json "$OBS_TMP/spec_metrics.json"
+python -m repro.obs.validate --metrics "$OBS_TMP/spec_metrics.json" \
+    --require-counter spec.accepted
 echo "== serving smoke: http front door, router over 2 replicas =="
 python -m repro.launch.serve --arch tiny --engine async --http \
     --replicas 2 --port 0 --port-file "$OBS_TMP/http.port" &
