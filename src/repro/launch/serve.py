@@ -83,6 +83,9 @@ def _serve_http(fe, *, port_file=None, supervisor=None) -> int:
     backend (and, behind a router, the worker fleet)."""
     import signal
     import threading
+
+    from ..serving import faults
+    faults.load_env()       # REPRO_FAULTS chaos harness (no-op unset)
     if port_file:
         with open(port_file, "w") as f:
             f.write(str(fe.port))
@@ -127,7 +130,8 @@ def _serve_replicated(args) -> int:
     print(f"starting {args.replicas} engine workers "
           f"(--arch {args.arch}) ...", flush=True)
     clients = sup.start()
-    router = Router(clients, page_size=args.page_size)
+    router = Router(clients, page_size=args.page_size,
+                    breaker_threshold=args.breaker_threshold)
     # the self-healing loop: death drains the replica from the ring;
     # a successful respawn re-admits it (docs/serving.md)
     sup.on_death = lambda rid, rc: router.mark_dead(rid)
@@ -135,7 +139,8 @@ def _serve_replicated(args) -> int:
     for rid, c in sorted(clients.items()):
         print(f"  worker {rid}: {c.describe()}", flush=True)
     fe = HttpFrontend(router, tokenizer=ByteTokenizer(), host=args.host,
-                      port=args.port).start()
+                      port=args.port, max_inflight=args.max_inflight,
+                      max_queue_depth=args.max_queue_depth).start()
     return _serve_http(fe, port_file=args.port_file, supervisor=sup)
 
 
@@ -234,6 +239,16 @@ def main() -> int:
                     help="--replicas: restarts the supervisor grants "
                          "each dead worker before it stays dead "
                          "(0 disables self-healing)")
+    ap.add_argument("--max-inflight", type=int, default=None,
+                    help="--http: admission cap — requests in flight "
+                         "at the frontend; excess is shed with 429 + "
+                         "Retry-After (docs/robustness.md)")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="--http: shed with 429 while the scheduler "
+                         "queue is this deep (in-process engine only)")
+    ap.add_argument("--breaker-threshold", type=int, default=3,
+                    help="--replicas: consecutive worker failures that "
+                         "open the router's circuit breaker")
     args = ap.parse_args()
 
     if args.engine == "bucket" and (args.metrics_json or args.trace
@@ -384,7 +399,10 @@ def main() -> int:
         if args.http:        # --replicas 0: in-process engine over HTTP
             from ..serving.http import HttpFrontend
             fe = HttpFrontend(eng, tokenizer=tok, host=args.host,
-                              port=args.port).start()
+                              port=args.port,
+                              max_inflight=args.max_inflight,
+                              max_queue_depth=args.max_queue_depth
+                              ).start()
             return _serve_http(fe, port_file=args.port_file)
         if args.interactive:
             print("interactive async demo — one prompt per line, "

@@ -33,14 +33,16 @@ by :class:`~repro.serving.supervisor.Supervisor`) with prefix-affinity
 placement and worker-death failover.
 """
 
+from . import faults
 from .async_engine import (AsyncEngine, AsyncEngineError, CancelledError,
-                           PollResult, RequestHandle, RequestState)
+                           DeadlineExceededError, PollResult,
+                           RequestHandle, RequestState)
 from .continuous import ContinuousServingEngine
 from .core import (Clock, EngineCore, MonotonicClock, StepResult,
                    VirtualClock)
-from .engine import (Completion, Request, ServingEngine,
+from .engine import (PRIORITIES, Completion, Request, ServingEngine,
                      throughput_report)
-from .http import HttpFrontend
+from .http import HttpFrontend, Overloaded
 from .kv_pool import (KVCachePool, KVPoolConfig, PrefixCache, PrefixMatch,
                       prefix_chain_key)
 from .router import (AffinityRing, HttpWorkerClient, NoReplicasError,
@@ -53,12 +55,13 @@ from .supervisor import Supervisor, WorkerStartupError
 __all__ = [
     "AffinityRing", "AsyncEngine", "AsyncEngineError", "BucketRunner",
     "CancelledError", "Clock", "Completion", "ContinuousScheduler",
-    "ContinuousServingEngine", "EngineCore", "HttpFrontend",
-    "HttpWorkerClient", "KVCachePool", "KVPoolConfig", "ModelRunner",
-    "MonotonicClock", "NoReplicasError", "PollResult", "PrefixCache",
-    "PrefixMatch", "Request", "RequestHandle", "RequestState", "Router",
-    "RouterError", "RouterHandle", "SamplingParams", "Schedule",
-    "Sequence", "ServingEngine", "StepResult", "Supervisor",
-    "VirtualClock", "WorkerDiedError", "WorkerStartupError", "sample",
+    "ContinuousServingEngine", "DeadlineExceededError", "EngineCore",
+    "HttpFrontend", "HttpWorkerClient", "KVCachePool", "KVPoolConfig",
+    "ModelRunner", "MonotonicClock", "NoReplicasError", "Overloaded",
+    "PRIORITIES", "PollResult", "PrefixCache", "PrefixMatch", "Request",
+    "RequestHandle", "RequestState", "Router", "RouterError",
+    "RouterHandle", "SamplingParams", "Schedule", "Sequence",
+    "ServingEngine", "StepResult", "Supervisor", "VirtualClock",
+    "WorkerDiedError", "WorkerStartupError", "faults", "sample",
     "sample_grouped", "throughput_report", "prefix_chain_key",
 ]

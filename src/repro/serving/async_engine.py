@@ -70,6 +70,13 @@ class CancelledError(RuntimeError):
     """``result()`` called on a request that was cancelled."""
 
 
+class DeadlineExceededError(RuntimeError):
+    """The request's ``deadline_s`` budget ran out before it finished:
+    the scheduler shed it (queued or running, pages drained) and the
+    handle FAILED with this as its cause.  Deliberately not retryable —
+    the client's budget is spent no matter who retries."""
+
+
 @dataclasses.dataclass(eq=False)    # identity semantics: one handle is
 class RequestHandle:                # one in-flight request, never a value
     """Caller's view of one in-flight request.  All mutable fields are
@@ -345,6 +352,16 @@ class AsyncEngine:
             except BaseException as e:      # noqa: BLE001 — a client
                 self._fail_handle(handle, e)   # bug fails ITS handle only
         with self._update:
+            for uid in res.expired:
+                # the scheduler already drained slot + pages and the
+                # core already traced FAILED — only the handle is left
+                handle = self._handles.pop(uid, None)
+                if handle is not None and not handle.done:
+                    handle.error = DeadlineExceededError(
+                        f"request {uid} missed its deadline "
+                        f"({handle.request.deadline_s} s budget)")
+                    handle.state = RequestState.FAILED
+                    self._c_failed.inc()
             for comp in res.finished:
                 # terminal handles leave the registry (the caller keeps
                 # its own reference) so a long-lived engine's per-step

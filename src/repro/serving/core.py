@@ -35,12 +35,13 @@ import numpy as np
 from ..models.transformer import Model
 from ..obs.metrics import MetricsRegistry, NullRegistry
 from ..obs.trace import NullTracer, RequestTracer
+from . import faults
 from .engine import Completion, Request
 from .kv_pool import KVCachePool, KVPoolConfig
 from .runner import ModelRunner, _pad_bucket
 from .sampler import sample, sample_grouped
 from .scheduler import ContinuousScheduler, Sequence
-from .spec import lookahead_for, propose
+from .spec import lookahead_for, note_accept, propose
 
 
 class Clock:
@@ -99,6 +100,10 @@ class StepResult:
 
     finished: List[Completion] = dataclasses.field(default_factory=list)
     emitted: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    #: uids shed this step because their deadline passed (queued or
+    #: running) — pages/slots already drained; the async layer fails
+    #: the handles with a deadline-exceeded cause
+    expired: List[int] = dataclasses.field(default_factory=list)
     n_prefills: int = 0
     n_decodes: int = 0
 
@@ -221,8 +226,14 @@ class EngineCore:
         # is on so k=0 snapshots stay free of dead spec.* series
         self._c_spec_drafted = self._c_spec_accepted = None
         self._c_spec_rollbacks = self._c_spec_pages = None
+        self._c_spec_autooff = None
         self._h_spec_accept = None
         if self.spec_decode:
+            self._c_spec_autooff = reg.counter(
+                "spec.auto_disabled",
+                "sequences whose speculation was turned off after the "
+                "windowed accept rate collapsed (spec.note_accept)"
+            ).labels()
             self._c_spec_drafted = reg.counter(
                 "spec.drafted",
                 "draft tokens proposed by the prompt-lookup drafter "
@@ -404,8 +415,18 @@ class EngineCore:
         admission of waiting arrivals (driver-relative seconds)."""
         clock = self.clock
         tracer = self.tracer
+        if faults.ACTIVE:       # injected worker latency (chaos tests)
+            faults.maybe_sleep("step.latency_ms")
         self._c_steps.inc()
         plan = self.scheduler.step(now)
+        for seq in plan.expired:
+            # scheduler already drained slot + pages; surface the death
+            # through the normal terminal vocabulary so trace validation
+            # holds, and let the async layer fail the handle
+            tracer.event(seq.uid, "FAILED", clock.now(),
+                         error="deadline exceeded",
+                         n_tokens=len(seq.generated))
+            self._meta.pop(seq.uid, None)
         for seq in plan.preempted:
             tracer.event(seq.uid, "PREEMPTED", clock.now(),
                          n_preempts=seq.n_preempts)
@@ -413,7 +434,8 @@ class EngineCore:
             if m is not None:       # next admission re-opens PREFILLING
                 m.pop("state", None)
         self._apply_copies()
-        res = StepResult(n_prefills=len(plan.prefills),
+        res = StepResult(expired=[s.uid for s in plan.expired],
+                         n_prefills=len(plan.prefills),
                          n_decodes=len(plan.decodes))
         for seq in plan.finished:
             res.finished.append(self._finish(seq))
@@ -576,6 +598,11 @@ class EngineCore:
             if a < m:
                 self._c_spec_rollbacks.inc()
             self._h_spec_accept.observe(a / m)
+            # live accept-rate feedback: a lane whose windowed rate has
+            # collapsed stops drafting (lookahead_for returns 0) — the
+            # (k+1)-wide verify forward is pure loss for it
+            if note_accept(seq, a, m):
+                self._c_spec_autooff.inc()
             # roll back the worst-case page grant: KV rows past the
             # accepted frontier are garbage; pages past the next write
             # go home (re-granted next step if the lane drafts again)

@@ -30,12 +30,30 @@ from ..models.transformer import Model
 from .sampler import SamplingParams, sample_grouped
 
 
+#: admission/preemption ordering of the SLO-aware scheduler: lower rank
+#: wins.  ``interactive`` traffic (chat turns — humans waiting on TTFT)
+#: outranks ``batch`` (offline eval, summarisation pipelines).
+PRIORITIES = ("interactive", "batch")
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: List[int]
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
+    #: SLO class — one of :data:`PRIORITIES`; the paged scheduler admits
+    #: interactive before batch and preempts batch before interactive.
+    #: The bucket engine ignores it (no admission queue to order).
+    priority: str = "interactive"
+    #: latency budget in seconds **from submission** (None = no
+    #: deadline).  The scheduler pins it to an absolute deadline on its
+    #: own clock at submit time (``arrival + deadline_s``) and sheds the
+    #: request — queued or running — once the deadline passes, instead
+    #: of burning prefill/decode on an answer nobody is waiting for.
+    #: Over HTTP this rides as ``deadline_ms`` (remaining budget,
+    #: re-anchored at every hop so clock skew never accumulates).
+    deadline_s: Optional[float] = None
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 

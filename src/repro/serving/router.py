@@ -41,7 +41,15 @@ Robustness semantics (the reason this layer exists at all):
 * a request that died with **zero tokens received** (never reached
   PREFILLING on the worker, or prefilled but never sampled — recompute
   is idempotent either way) retries on a surviving replica, bounded by
-  ``max_retries``; once tokens flowed, the stream is tainted and fails.
+  ``max_retries`` AND by the request's remaining ``deadline_s`` budget
+  — the router never dispatches an attempt that has already blown its
+  SLO, and each attempt forwards only the *remaining* budget as the
+  wire field ``deadline_ms``;
+* a replica that is *alive but failing* (timeouts, error frames, lossy
+  streams) trips a per-replica **circuit breaker** after
+  ``breaker_threshold`` consecutive failures: it leaves the ring and
+  the fallback pool, and after ``breaker_probation_s`` the next pick
+  issues a ``healthy()`` probe and readmits it on success.
 
 The router exposes the ``AsyncEngine`` caller surface (``submit`` /
 ``stream`` / ``result`` / ``cancel`` / ``shutdown`` / ``registry``),
@@ -63,7 +71,8 @@ import time
 from typing import (Any, Callable, Dict, Iterable, Iterator, List,
                     Optional, Tuple)
 
-from .async_engine import CancelledError, RequestState
+from .async_engine import (CancelledError, DeadlineExceededError,
+                           RequestState)
 from .engine import Completion, Request
 from .kv_pool import prefix_chain_key
 
@@ -298,10 +307,14 @@ class Router:
     def __init__(self, workers: Dict[int, Any], *, page_size: int = 16,
                  affinity_blocks: int = 2, timeout_s: float = 120.0,
                  max_retries: int = 1, load_ttl: float = 0.5,
+                 breaker_threshold: int = 3,
+                 breaker_probation_s: float = 2.0,
                  registry=None, seed: int = 0,
                  tokenizer: Any = None) -> None:
         if not workers:
             raise ValueError("router needs at least one replica")
+        if breaker_threshold < 1:
+            raise ValueError("breaker_threshold must be >= 1")
         from ..obs.metrics import MetricsRegistry
         self.workers = dict(workers)
         self.page_size = page_size
@@ -309,6 +322,16 @@ class Router:
         self.timeout_s = timeout_s
         self.max_retries = max_retries
         self.load_ttl = load_ttl
+        #: per-replica circuit breaker: ``breaker_threshold``
+        #: CONSECUTIVE worker-attributable failures (death, timeout,
+        #: error frame, lossy stream) open the breaker — the replica
+        #: leaves the ring and the fallback pool without being declared
+        #: dead; after ``breaker_probation_s`` the next pick issues a
+        #: ``healthy()`` probe and a passing replica is readmitted.
+        #: Catches the "alive but failing" replica the supervisor's
+        #: process monitor can't see.
+        self.breaker_threshold = breaker_threshold
+        self.breaker_probation_s = breaker_probation_s
         self.tokenizer = tokenizer
         self.ring = AffinityRing(self.workers)
         self.registry = registry if registry is not None \
@@ -319,6 +342,9 @@ class Router:
         self._uids = itertools.count()
         self._alive = True
         self._dead: Dict[int, BaseException] = {}
+        self._fail_streak: Dict[int, int] = {r: 0 for r in self.workers}
+        #: rid -> earliest monotonic time a health probe may run
+        self._breaker: Dict[int, float] = {}
         self._inflight: Dict[int, int] = {r: 0 for r in self.workers}
         #: rid -> (expiry monotonic time, score) — the TTL cache in
         #: front of the ``/metrics.json`` load scrape
@@ -356,6 +382,17 @@ class Router:
         self._c_load_scrapes = reg.counter(
             "router.load_scrapes",
             "/metrics.json load probes issued (cache misses)").labels()
+        self._c_breaker_open = reg.counter(
+            "router.breaker_open",
+            "circuit breakers opened (consecutive-failure threshold "
+            "hit; replica on probation)").labels()
+        self._c_breaker_closed = reg.counter(
+            "router.breaker_closed",
+            "circuit breakers closed after a passing health probe"
+            ).labels()
+        self._c_breaker_probes = reg.counter(
+            "router.breaker_probes",
+            "health probes issued for breaker-open replicas").labels()
         self._g_live = reg.gauge(
             "router.replicas_live", "live replicas in the ring").labels()
         self._g_live.set(len(self.workers))
@@ -458,9 +495,13 @@ class Router:
                 return False
             if client is not None:
                 self.workers[rid] = client
-            if rid not in self._dead:
+            if rid not in self._dead and rid not in self._breaker:
                 return False
-            del self._dead[rid]
+            self._dead.pop(rid, None)
+            # a respawned worker starts with a clean slate: breaker
+            # closed, streak zeroed
+            self._breaker.pop(rid, None)
+            self._fail_streak[rid] = 0
             self.ring.add(rid)
             self._inflight[rid] = 0
             self._g_inf[rid].set(0)
@@ -472,7 +513,8 @@ class Router:
     def health(self) -> Dict[str, Any]:
         with self._lock:
             return {"replicas": {
-                str(r): {"alive": r not in self._dead}
+                str(r): {"alive": r not in self._dead,
+                         "breaker_open": r in self._breaker}
                 for r in sorted(self.workers)},
                 "live": len(self._live_locked())}
 
@@ -497,7 +539,58 @@ class Router:
     # placement
     # ------------------------------------------------------------------
     def _live_locked(self) -> List[int]:
-        return [r for r in sorted(self.workers) if r not in self._dead]
+        return [r for r in sorted(self.workers)
+                if r not in self._dead and r not in self._breaker]
+
+    # ------------------------------------------------------------------
+    # circuit breaker
+    # ------------------------------------------------------------------
+    def _record_failure(self, rid: int) -> None:
+        """One worker-attributable failure (death, timeout, error
+        frame, lossy stream).  At ``breaker_threshold`` consecutive
+        failures the breaker opens: out of the ring and the fallback
+        pool until a probation-gated health probe passes."""
+        with self._lock:
+            self._fail_streak[rid] = self._fail_streak.get(rid, 0) + 1
+            if (self._fail_streak[rid] >= self.breaker_threshold
+                    and rid not in self._breaker):
+                self._breaker[rid] = (time.monotonic()
+                                      + self.breaker_probation_s)
+                self.ring.remove(rid)
+                self._load_cache.pop(rid, None)
+                self._c_breaker_open.inc()
+                self._g_live.set(len(self._live_locked()))
+
+    def _record_success(self, rid: int) -> None:
+        with self._lock:
+            self._fail_streak[rid] = 0
+
+    def _probe_breakers(self) -> None:
+        """Readmit breaker-open replicas whose probation elapsed and
+        whose ``healthy()`` probe passes.  Probes run OUTSIDE the lock
+        (network call); a failing probe re-arms the probation window."""
+        now = time.monotonic()
+        with self._lock:
+            due = [r for r, t in self._breaker.items()
+                   if t <= now and r not in self._dead]
+        for rid in due:
+            probe = getattr(self.workers[rid], "healthy", None)
+            self._c_breaker_probes.inc()
+            ok = probe(timeout=2.0) if callable(probe) else True
+            with self._lock:
+                if rid not in self._breaker:    # raced with readmit()
+                    continue
+                if ok:
+                    del self._breaker[rid]
+                    self._fail_streak[rid] = 0
+                    if rid not in self._dead:
+                        self.ring.add(rid)
+                    self._load_cache.pop(rid, None)
+                    self._c_breaker_closed.inc()
+                else:
+                    self._breaker[rid] = (time.monotonic()
+                                          + self.breaker_probation_s)
+                self._g_live.set(len(self._live_locked()))
 
     def _load_score(self, rid: int) -> Tuple:
         """Load rank for the power-of-two fallback, lower = less
@@ -536,13 +629,17 @@ class Router:
                                 max_blocks=self.affinity_blocks)
 
     def _pick(self, key: Optional[int]) -> int:
+        if self._breaker:       # probation over? probe + readmit
+            self._probe_breakers()
         with self._lock:
             live = self._live_locked()
             if not live:
                 raise NoReplicasError(
-                    "all replicas are dead: "
+                    "all replicas are dead or breaker-open: "
                     + "; ".join(f"{r}: {e}"
-                                for r, e in sorted(self._dead.items())))
+                                for r, e in sorted(self._dead.items()))
+                    + (f"; breaker-open: {sorted(self._breaker)}"
+                       if self._breaker else ""))
             if key is not None:
                 rid = self.ring.pick(key)
                 self._c_keyed.inc()
@@ -567,11 +664,27 @@ class Router:
                 "max_tokens": sp.max_new_tokens,
                 "temperature": sp.temperature, "top_k": sp.top_k,
                 "eos_id": sp.eos_id}
+        if req.priority != "interactive":
+            body["priority"] = req.priority
         t0 = time.perf_counter()
+        # the deadline budget is anchored at router ingress; each
+        # attempt forwards only the *remaining* budget, so a retry
+        # after a slow first attempt cannot overrun the caller's SLO
+        deadline_abs = (t0 + req.deadline_s
+                        if req.deadline_s is not None else None)
         while True:
             if handle._cancel or not self._alive:
                 self._terminate(handle, RequestState.CANCELLED)
                 return
+            if deadline_abs is not None:
+                remaining = deadline_abs - time.perf_counter()
+                if remaining <= 0:
+                    self._fail(handle, DeadlineExceededError(
+                        f"request {handle.uid} spent its "
+                        f"{req.deadline_s} s budget at the router "
+                        f"(after {handle.n_retries} retries)"))
+                    return
+                body["deadline_ms"] = remaining * 1e3
             try:
                 rid = self._pick(key)
             except NoReplicasError as e:
@@ -610,9 +723,12 @@ class Router:
                     self._release(rid)
             except WorkerDiedError as e:
                 alive = self.workers[rid].alive()
+                self._record_failure(rid)
                 self.mark_dead(rid, cause=e)
                 can_retry = (not handle.tokens
-                             and handle.n_retries < self.max_retries)
+                             and handle.n_retries < self.max_retries
+                             and (deadline_abs is None
+                                  or time.perf_counter() < deadline_abs))
                 if can_retry:
                     handle.n_retries += 1
                     self._c_retries.inc()
@@ -625,6 +741,8 @@ class Router:
                 self._fail(handle, err)
                 return
             except BaseException as e:          # noqa: BLE001 — timeout,
+                if isinstance(e, (TimeoutError, RouterError)):
+                    self._record_failure(rid)   # worker-attributable
                 self._fail(handle, e)           # worker reject, client bug
                 return
             t1 = time.perf_counter()
@@ -637,10 +755,12 @@ class Router:
             if done_info is not None:
                 n = done_info.get("completion_tokens")
                 if n is not None and n != len(handle.tokens):
+                    self._record_failure(rid)   # lossy stream
                     self._fail(handle, RouterError(
                         f"worker {rid} reported {n} tokens but "
                         f"{len(handle.tokens)} frames arrived"))
                     return
+            self._record_success(rid)
             with self._update:
                 handle.completion = comp
                 handle.state = RequestState.FINISHED

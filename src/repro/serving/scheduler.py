@@ -26,8 +26,15 @@ pure data (block tables, position vectors) — the compiled decode step
 never re-specialises.  The scheduler is deliberately jax-free: it
 manipulates the :class:`~repro.serving.kv_pool.KVCachePool` and emits
 :class:`Schedule` decisions; the engine turns decisions into device
-calls.  Policies beyond FCFS (priority, SLA-aware) slot in behind
-``policy=`` — see ROADMAP "Open items".
+calls.
+
+The base policy is FCFS; SLO awareness is **data-driven** on top of it
+(no policy knob): requests carrying a ``priority`` class admit in
+``(priority, arrival)`` order and are preempted batch-first, and
+requests carrying a ``deadline_s`` budget are shed — queued or running
+— the step their deadline passes (``Schedule.expired``), *before* any
+more prefill or decode is burned on them.  A workload with uniform
+priorities and no deadlines schedules byte-identically to plain FCFS.
 
 Invariants the engine relies on:
 
@@ -53,9 +60,15 @@ import dataclasses
 from typing import Deque, Dict, List, Optional
 from collections import deque
 
-from .engine import Request
+from . import faults
+from .engine import PRIORITIES, Request
 from .kv_pool import KVCachePool
 from .spec import lookahead_for
+
+#: admission/victim ordering key per SLO class — lower admits first,
+#: higher is preempted first.  Derived from ``engine.PRIORITIES`` so
+#: the two stay one source of truth.
+PRIORITY_RANK = {name: i for i, name in enumerate(PRIORITIES)}
 
 
 @dataclasses.dataclass(eq=False)    # identity semantics: a Sequence is
@@ -71,10 +84,21 @@ class Sequence:                     # one admission ticket, never a value
     n_preempts: int = 0
     n_cached_tokens: int = 0        # prefix-cache hits at last admission
     t_first_sched: float = -1.0     # first time it got a slot
+    #: absolute deadline on the scheduler's clock (``arrival +
+    #: request.deadline_s``, pinned at submit); +inf = no deadline
+    deadline: float = float("inf")
+    #: verify-step (accepted, drafted) history + auto-off latch for
+    #: per-sequence speculation (``spec.note_accept``)
+    spec_recent: List = dataclasses.field(default_factory=list)
+    spec_disabled: bool = False
 
     @property
     def uid(self) -> int:
         return self.request.uid
+
+    @property
+    def priority_rank(self) -> int:
+        return PRIORITY_RANK[self.request.priority]
 
     @property
     def full_prompt(self) -> List[int]:
@@ -114,6 +138,9 @@ class Schedule:
     preempted: List[Sequence] = dataclasses.field(default_factory=list)
     prefills: List[Sequence] = dataclasses.field(default_factory=list)
     decodes: List[Sequence] = dataclasses.field(default_factory=list)
+    #: deadline-expired sequences shed this step — slot and pages are
+    #: already released; the engine only has to fail/trace them
+    expired: List[Sequence] = dataclasses.field(default_factory=list)
 
 
 class ContinuousScheduler:
@@ -142,9 +169,13 @@ class ContinuousScheduler:
         self.running: Dict[int, Sequence] = {}      # slot -> Sequence
         self._free_slots = list(range(max_running - 1, -1, -1))
         self.n_preemptions = 0
+        #: latched True on the first deadline-bearing submit: SLO-free
+        #: workloads skip the per-step expiry scans entirely, keeping
+        #: the hot path byte-identical to the pre-SLO scheduler
+        self._has_deadlines = False
         # observability (optional; instruments resolved once — the
         # scheduler stays jax-free, repro.obs is stdlib-only)
-        self._m_preempt = self._m_admit = None
+        self._m_preempt = self._m_admit = self._m_expired = None
         self._g_queue = self._g_running = None
         if registry is not None:
             self._m_preempt = registry.counter(
@@ -153,6 +184,10 @@ class ContinuousScheduler:
             self._m_admit = registry.counter(
                 "scheduler.admissions",
                 "sequences admitted into the running batch").labels()
+            self._m_expired = registry.counter(
+                "scheduler.expired",
+                "deadline-expired sequences shed before completion"
+            ).labels()
             self._g_queue = registry.gauge(
                 "scheduler.queue_depth",
                 "waiting sequences after the last step").labels()
@@ -162,8 +197,17 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------
     def submit(self, request: Request, arrival: float = 0.0) -> Sequence:
+        if request.priority not in PRIORITY_RANK:
+            raise ValueError(
+                f"request {request.uid}: unknown priority "
+                f"{request.priority!r} (expected one of {PRIORITIES})")
         seq = Sequence(request=request, arrival=arrival)
-        self.waiting.append(seq)
+        if request.deadline_s is not None:
+            # pin the relative budget to THIS clock's timeline once, at
+            # submit — every later comparison is a plain float check
+            seq.deadline = arrival + request.deadline_s
+            self._has_deadlines = True
+        self._requeue(seq)
         return seq
 
     def has_work(self) -> bool:
@@ -204,10 +248,14 @@ class ContinuousScheduler:
         return slot % n
 
     def _requeue(self, seq: Sequence) -> None:
-        """FCFS re-insertion by arrival time (stable)."""
-        i = 0
+        """Priority-then-FCFS insertion (stable): the queue is kept
+        sorted by ``(priority_rank, arrival)``, so interactive traffic
+        admits ahead of batch and order within a class is arrival
+        order.  With uniform priorities this degrades to exactly the
+        old FCFS queue — ties insert *after* equals."""
+        key = (seq.priority_rank, seq.arrival)
         for i, w in enumerate(self.waiting):
-            if w.arrival > seq.arrival:
+            if (w.priority_rank, w.arrival) > key:
                 self.waiting.insert(i, seq)
                 return
         self.waiting.append(seq)
@@ -215,6 +263,8 @@ class ContinuousScheduler:
     def _admit(self, seq: Sequence, slot: int) -> bool:
         """Reserve KV for ``seq``'s whole prompt + one decode token,
         sharing every prefix-cached page instead of allocating it."""
+        if faults.ACTIVE and faults.should_fire("pool.exhaust"):
+            return False        # injected memory pressure (chaos tests)
         pool = self.pool
         prompt = seq.full_prompt
         need_total = pool.cfg.pages_for(len(prompt) + 1)
@@ -244,10 +294,13 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------
     def step(self, now: float = 0.0) -> Schedule:
-        """Plan one engine step.  Order matters: evict, admit, grow."""
+        """Plan one engine step.  Order matters: evict, shed, admit,
+        grow."""
         sched = Schedule()
 
         # 1. evict finished sequences — slot and pages free immediately
+        #    (a sequence that completed AT its deadline still counts as
+        #    finished: eviction runs before expiry shedding)
         for slot in sorted(self.running):
             seq = self.running[slot]
             if not seq.is_prefilling and seq.is_done(self.max_len):
@@ -257,14 +310,43 @@ class ContinuousScheduler:
                 seq.slot = -1
                 sched.finished.append(seq)
 
-        # 2. admit waiting arrivals while a slot + prompt pages exist
-        while (self.waiting and self._free_slots
-               and self.waiting[0].arrival <= now):
-            seq = self.waiting[0]
+        # 2. shed deadline-expired work: queued requests go *before*
+        #    they burn any prefill, running ones before another step is
+        #    spent on an answer nobody is waiting for.  Pages drain
+        #    through the same release path as cancel/preempt (CoW
+        #    pending copies included), so the pool stays clean.
+        if self._has_deadlines:
+            for seq in [w for w in self.waiting if now >= w.deadline]:
+                self.waiting.remove(seq)
+                self.pool.release(seq.uid)      # no-op for queued seqs
+                sched.expired.append(seq)
+            for slot in sorted(self.running):
+                seq = self.running[slot]
+                if now >= seq.deadline:
+                    del self.running[slot]
+                    self._free_slots.append(slot)
+                    self.pool.release(seq.uid)
+                    seq.slot = -1
+                    sched.expired.append(seq)
+            if sched.expired and self._m_expired is not None:
+                self._m_expired.inc(len(sched.expired))
+
+        # 3. admit arrived waiting sequences — the queue is kept in
+        #    (priority, arrival) order, so this walk is priority-first;
+        #    not-yet-arrived entries are skipped (a future interactive
+        #    arrival must not block an already-arrived batch request).
+        #    The first failed page reservation stops admission, as
+        #    before.
+        i = 0
+        while self._free_slots and i < len(self.waiting):
+            seq = self.waiting[i]
+            if seq.arrival > now:
+                i += 1
+                continue
             slot = self._free_slots[-1]
             if not self._admit(seq, slot):
                 break
-            self.waiting.popleft()
+            del self.waiting[i]
             self._free_slots.pop()
             seq.slot = slot
             if seq.t_first_sched < 0:
@@ -273,14 +355,15 @@ class ContinuousScheduler:
                 self._m_admit.inc()
             self.running[slot] = seq
 
-        # 3. every sequence whose prompt KV is not fully resident runs
+        # 4. every sequence whose prompt KV is not fully resident runs
         #    one prefill chunk this step (freshly admitted ones included)
         for slot in sorted(self.running):
             if self.running[slot].is_prefilling:
                 sched.prefills.append(self.running[slot])
 
-        # 4. grow every decoding sequence for this step's token write;
-        #    preempt youngest arrivals when the pool runs dry
+        # 5. grow every decoding sequence for this step's token write;
+        #    preempt lowest-priority / youngest arrivals when the pool
+        #    runs dry
         for slot in sorted(list(self.running)):
             seq = self.running.get(slot)
             if seq is None:                 # preempted earlier in this loop
@@ -329,11 +412,16 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------------
     def _pick_victim(self, exclude: Sequence) -> Optional[Sequence]:
-        """Youngest arrival loses (FCFS fairness for the oldest)."""
+        """Batch loses before interactive; within a class the youngest
+        arrival loses (FCFS fairness for the oldest).  Evicting batch
+        first is what bounds interactive TTFT/ITL under pool pressure —
+        and with uniform priorities this is exactly the old
+        youngest-arrival rule."""
         candidates = [s for s in self.running.values() if s is not exclude]
         if not candidates:
             return None
-        return max(candidates, key=lambda s: (s.arrival, s.uid))
+        return max(candidates,
+                   key=lambda s: (s.priority_rank, s.arrival, s.uid))
 
     def _preempt(self, seq: Sequence) -> None:
         self.n_preemptions += 1

@@ -35,6 +35,17 @@ from typing import List, Sequence
 MIN_NGRAM = 1
 MAX_NGRAM = 3
 
+#: per-sequence speculation auto-off (ROADMAP: "use the live
+#: spec.accept_rate signal"): once a sequence has AUTO_OFF_WINDOW
+#: verify steps of history and its windowed acceptance rate sits below
+#: AUTO_OFF_THRESHOLD, drafting for that sequence is pure overhead —
+#: every rejected draft row is a KV page grant + a verify lane the
+#: hardware ran for nothing — so the engine flips it off for the rest
+#: of the sequence's life (preemption-restart included: the text that
+#: defeated the drafter is still the text).
+AUTO_OFF_WINDOW = 4
+AUTO_OFF_THRESHOLD = 0.25
+
 
 def propose(context: Sequence[int], k: int, *,
             min_ngram: int = MIN_NGRAM,
@@ -75,6 +86,8 @@ def lookahead_for(seq, k: int, max_len: int) -> int:
     Zero (no speculation) when:
 
     * ``k`` is zero — speculation disabled;
+    * the sequence tripped the acceptance auto-off
+      (``seq.spec_disabled``, see :func:`note_accept`);
     * the lane samples (``temperature > 0``) — acceptance compares
       drafts against the greedy argmax, which is only the lane's real
       output when the lane itself is greedy.  Byte parity over lenient
@@ -88,9 +101,38 @@ def lookahead_for(seq, k: int, max_len: int) -> int:
     """
     if k <= 0 or seq.is_prefilling:
         return 0
+    if getattr(seq, "spec_disabled", False):
+        return 0
     sp = seq.request.sampling
     if sp.temperature > 0.0:
         return 0
     room_len = max_len - seq.next_pos - 1
     room_new = sp.max_new_tokens - len(seq.generated) - 1
     return max(0, min(k, room_len, room_new))
+
+
+def note_accept(seq, accepted: int, drafted: int, *,
+                window: int = AUTO_OFF_WINDOW,
+                threshold: float = AUTO_OFF_THRESHOLD) -> bool:
+    """Record one verify step's (accepted, drafted) outcome on ``seq``
+    and apply the auto-off policy over the last ``window`` steps.
+
+    Returns True exactly once — on the step that trips the breaker
+    (``seq.spec_disabled`` goes False -> True) — so the caller can count
+    ``spec.auto_disabled`` without double-counting.  Steps that drafted
+    nothing (empty :func:`propose` result) carry no acceptance signal
+    and are ignored.
+    """
+    if drafted <= 0 or seq.spec_disabled:
+        return False
+    seq.spec_recent.append((accepted, drafted))
+    if len(seq.spec_recent) > window:
+        del seq.spec_recent[0]
+    if len(seq.spec_recent) < window:
+        return False
+    a = sum(x for x, _ in seq.spec_recent)
+    m = sum(x for _, x in seq.spec_recent)
+    if a < threshold * m:
+        seq.spec_disabled = True
+        return True
+    return False

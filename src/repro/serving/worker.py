@@ -87,9 +87,13 @@ def main(argv=None) -> int:
         params = model.init(jax.random.PRNGKey(args.seed))
 
     from ..data.tokenizer import ByteTokenizer
+    from . import faults
     from .async_engine import AsyncEngine
     from .http import HttpFrontend
 
+    # fault-injection harness: workers inherit REPRO_FAULTS from the
+    # launching shell / supervisor (no-op unless set; docs/robustness.md)
+    faults.load_env()
     quant = None
     if args.quant != "none" or args.kv_dtype != "fp32":
         from ..quant.policy import QuantPolicy

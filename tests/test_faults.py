@@ -1,0 +1,158 @@
+"""Fault-injection harness (PR: SLO-aware overload protection).
+
+``repro.serving.faults`` is the switchboard every chaos test and the
+``tools/check.sh`` chaos smoke lane arm failures through, so its own
+contract gets pinned here: arming/disarming semantics, the zero-cost
+``ACTIVE`` fast path, deterministic every-N-th firing, ``REPRO_FAULTS``
+environment parsing, and the two in-tree integration points that need
+no model — the HTTP front-end's lossy-stream fault and the scheduler's
+injected pool exhaustion.
+"""
+
+import json
+import time
+
+import pytest
+
+from repro.obs import MetricsRegistry
+from repro.serving import (ContinuousScheduler, KVCachePool, KVPoolConfig,
+                           Request, SamplingParams, faults)
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+class TestRegistry:
+    def test_arm_disarm_and_active_flag(self):
+        assert not faults.ACTIVE
+        faults.arm("step.latency_ms", 5)
+        assert faults.ACTIVE
+        assert faults.armed("step.latency_ms")
+        assert faults.value("step.latency_ms") == 5.0
+        faults.arm("http.drop_sse", 2)
+        faults.disarm("step.latency_ms")
+        assert faults.ACTIVE            # one point still armed
+        faults.disarm("http.drop_sse")
+        assert not faults.ACTIVE
+        assert faults.value("step.latency_ms", 7.0) == 7.0
+
+    def test_reset_clears_everything(self):
+        faults.arm("pool.exhaust", 1)
+        faults.should_fire("pool.exhaust")
+        faults.reset()
+        assert not faults.ACTIVE
+        assert not faults.armed("pool.exhaust")
+        assert faults.hits("pool.exhaust") == 0
+
+    def test_should_fire_every_nth_is_deterministic(self):
+        faults.arm("http.drop_sse", 3)
+        fired = [faults.should_fire("http.drop_sse") for _ in range(9)]
+        assert fired == [False, False, True] * 3
+        assert faults.hits("http.drop_sse") == 3
+
+    def test_should_fire_unarmed_is_false(self):
+        assert not faults.should_fire("http.drop_sse")
+        assert faults.hits("http.drop_sse") == 0
+
+    def test_maybe_sleep_sleeps_and_counts(self):
+        faults.arm("step.latency_ms", 30)
+        t0 = time.perf_counter()
+        faults.maybe_sleep("step.latency_ms")
+        assert time.perf_counter() - t0 >= 0.025
+        assert faults.hits("step.latency_ms") == 1
+
+    def test_maybe_sleep_unarmed_is_free(self):
+        t0 = time.perf_counter()
+        faults.maybe_sleep("step.latency_ms")
+        assert time.perf_counter() - t0 < 0.02
+        assert faults.hits("step.latency_ms") == 0
+
+
+class TestLoadEnv:
+    def test_parses_pairs_and_skips_garbage(self, monkeypatch):
+        monkeypatch.setenv(faults.ENV_VAR,
+                           "step.latency_ms=40, http.drop_sse=3,"
+                           "bogus, nope=abc, =5")
+        assert faults.load_env() == 2
+        assert faults.value("step.latency_ms") == 40.0
+        assert faults.value("http.drop_sse") == 3.0
+        assert not faults.armed("bogus")
+
+    def test_empty_env_is_noop(self, monkeypatch):
+        monkeypatch.delenv(faults.ENV_VAR, raising=False)
+        assert faults.load_env() == 0
+        assert not faults.ACTIVE
+
+
+# ----------------------------------------------------------------------
+# integration: injected pool exhaustion blocks scheduler admission
+# ----------------------------------------------------------------------
+def _pool(n_pages=17, page_size=4):
+    return KVCachePool(KVPoolConfig(
+        n_pages=n_pages, page_size=page_size, n_layers=2, n_kv_heads=2,
+        head_dim=8, dtype_bytes=4))
+
+
+class TestPoolExhaustFault:
+    def test_admission_fails_while_armed(self):
+        sched = ContinuousScheduler(_pool(), max_running=2, max_len=64)
+        sched.submit(Request(uid=0, prompt=[1, 2, 3],
+                             sampling=SamplingParams(max_new_tokens=2)))
+        faults.arm("pool.exhaust", 1)       # every admission attempt
+        plan = sched.step()
+        assert not plan.prefills and not sched.running
+        assert faults.hits("pool.exhaust") == 1
+        faults.disarm("pool.exhaust")
+        plan = sched.step()
+        assert len(sched.running) == 1      # heals once disarmed
+
+
+# ----------------------------------------------------------------------
+# integration: the HTTP front-end's lossy-stream fault
+# ----------------------------------------------------------------------
+class TestDropSseFault:
+    def test_dropped_frames_still_counted_in_done(self):
+        from test_http_serving import FakeBackend, _post, _read_sse
+        from repro.serving.http import HttpFrontend
+
+        faults.arm("http.drop_sse", 2)      # lose every 2nd token frame
+        fe = HttpFrontend(FakeBackend([11, 12, 13, 14])).start()
+        try:
+            conn, resp = _post(fe, {"prompt": [1, 2, 3],
+                                    "max_tokens": 4, "stream": True})
+            assert resp.status == 200
+            _, events = _read_sse(resp)
+            conn.close()
+        finally:
+            fe.close()
+        toks = [e["token"] for e in events if "token" in e]
+        done = [e for e in events if "done" in e][0]["done"]
+        # the wire lost frames; the done frame reports the true count —
+        # exactly the mismatch the router's lossy-stream check catches
+        assert toks == [11, 13]
+        assert done["completion_tokens"] == 4
+        assert faults.hits("http.drop_sse") == 2
+
+    def test_scrape_fault_slows_metrics_endpoint(self):
+        import http.client
+
+        from test_http_serving import FakeBackend
+        from repro.serving.http import HttpFrontend
+
+        faults.arm("http.scrape_ms", 40)
+        fe = HttpFrontend(FakeBackend()).start()
+        try:
+            conn = http.client.HTTPConnection(fe.host, fe.port, timeout=5)
+            t0 = time.perf_counter()
+            conn.request("GET", "/metrics.json")
+            body = conn.getresponse().read()
+            assert time.perf_counter() - t0 >= 0.03
+            json.loads(body)
+            conn.close()
+        finally:
+            fe.close()
+        assert faults.hits("http.scrape_ms") == 1

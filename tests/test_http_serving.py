@@ -139,10 +139,11 @@ def _read_sse(resp):
 # ----------------------------------------------------------------------
 class TestParseBody:
     def test_token_id_prompt(self):
-        toks, sp, stream = parse_completion_body(
+        toks, sp, stream, slo = parse_completion_body(
             b'{"prompt": [1, 2, 3], "max_tokens": 4, "stream": true,'
             b' "temperature": 0.5, "top_k": 7, "eos_id": 2}')
         assert toks == [1, 2, 3] and stream
+        assert slo == {"priority": "interactive", "deadline_ms": None}
         assert (sp.max_new_tokens, sp.temperature, sp.top_k, sp.eos_id) \
             == (4, 0.5, 7, 2)
 
@@ -153,7 +154,7 @@ class TestParseBody:
         class Tok:
             def encode(self, s):
                 return [ord(c) for c in s]
-        toks, sp, stream = parse_completion_body(
+        toks, sp, stream, _ = parse_completion_body(
             b'{"prompt": "hi"}', tokenizer=Tok())
         assert toks == [104, 105] and sp.max_new_tokens == 16
         assert not stream

@@ -1,0 +1,589 @@
+"""SLO-aware overload protection (PR: deadlines, priority classes,
+load shedding, circuit breaking).
+
+Scheduler level (no model): priority-ordered admission that degrades to
+byte-identical FCFS under uniform priorities, batch-first victim
+picking, and deadline expiry at every awkward moment — queued,
+mid-prefill-chunk, mid-decode, holding a queued CoW copy, holding
+shared prefix pages — with the pool draining clean each time.
+
+Engine level: ``EngineCore.step`` reports expired uids and counts
+``scheduler.expired``; ``AsyncEngine`` fails the handle with a chained
+``DeadlineExceededError`` (slow lane).
+
+Edge level: the HTTP front-end's bounded admission (429 + Retry-After +
+structured error body), SLO field parsing/propagation, and the
+router's per-replica circuit breaker + deadline-aware retry budget.
+
+Spec satellite: the per-sequence acceptance auto-off
+(``spec.note_accept`` / ``lookahead_for``).
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.obs import MetricsRegistry
+from repro.serving import (AsyncEngine, ContinuousScheduler,
+                           DeadlineExceededError, EngineCore, KVCachePool,
+                           KVPoolConfig, Request, RequestState, Router,
+                           RouterError, SamplingParams, VirtualClock,
+                           WorkerDiedError)
+from repro.serving.scheduler import PRIORITY_RANK
+from repro.serving.spec import lookahead_for, note_accept
+
+
+def _pool(n_pages=17, page_size=4):
+    return KVCachePool(KVPoolConfig(
+        n_pages=n_pages, page_size=page_size, n_layers=2, n_kv_heads=2,
+        head_dim=8, dtype_bytes=4))
+
+
+def _req(uid, prompt, *, priority="interactive", deadline_s=None,
+         max_new=4):
+    return Request(uid=uid, prompt=list(prompt),
+                   sampling=SamplingParams(max_new_tokens=max_new),
+                   priority=priority, deadline_s=deadline_s)
+
+
+def _sched(pool=None, *, max_running=2, max_len=64, registry=None,
+           **kw):
+    return ContinuousScheduler(pool or _pool(), max_running=max_running,
+                               max_len=max_len, registry=registry, **kw)
+
+
+# ----------------------------------------------------------------------
+# priority classes
+# ----------------------------------------------------------------------
+class TestPriorityAdmission:
+    def test_rank_order(self):
+        assert PRIORITY_RANK["interactive"] < PRIORITY_RANK["batch"]
+
+    def test_unknown_priority_rejected(self):
+        with pytest.raises(ValueError, match="priority"):
+            _sched().submit(_req(0, [1, 2], priority="bulk"))
+
+    def test_interactive_admits_ahead_of_earlier_batch(self):
+        sched = _sched(max_running=2)
+        sched.submit(_req(0, [1, 2, 3], priority="batch"), arrival=0.0)
+        sched.submit(_req(1, [4, 5, 6], priority="batch"), arrival=1.0)
+        sched.submit(_req(2, [7, 8, 9]), arrival=2.0)   # interactive
+        sched.step(now=2.0)
+        admitted = {s.uid for s in sched.running.values()}
+        assert admitted == {2, 0}       # interactive jumps the queue
+        assert [s.uid for s in sched.waiting] == [1]
+
+    def test_uniform_priorities_degrade_to_fcfs(self):
+        # same-class traffic must admit in exact arrival order — the
+        # pre-SLO byte-parity contract
+        for prio in ("interactive", "batch"):
+            sched = _sched(max_running=3)
+            for uid, t in ((0, 0.0), (1, 0.5), (2, 1.0)):
+                sched.submit(_req(uid, [uid + 1, 2, 3], priority=prio),
+                             arrival=t)
+            assert [s.uid for s in sched.waiting] == [0, 1, 2]
+            sched.step(now=1.0)
+            assert sorted(sched.running) == [0, 1, 2]
+            assert [sched.running[s].uid for s in sorted(sched.running)] \
+                == [0, 1, 2]
+
+    def test_future_interactive_does_not_block_arrived_batch(self):
+        sched = _sched(max_running=1)
+        sched.submit(_req(0, [1, 2], priority="batch"), arrival=0.0)
+        sched.submit(_req(1, [3, 4]), arrival=10.0)     # not here yet
+        sched.step(now=0.0)
+        assert {s.uid for s in sched.running.values()} == {0}
+
+    def test_victim_is_batch_before_interactive(self):
+        sched = _sched(max_running=2)
+        sched.submit(_req(0, [1, 2, 3], priority="batch"), arrival=0.0)
+        sched.submit(_req(1, [4, 5, 6]), arrival=1.0)   # interactive
+        sched.step(now=1.0)
+        inter = next(s for s in sched.running.values() if s.uid == 1)
+        victim = sched._pick_victim(exclude=inter)
+        assert victim.uid == 0          # batch loses despite older arrival
+
+
+# ----------------------------------------------------------------------
+# deadline expiry at awkward moments
+# ----------------------------------------------------------------------
+class TestDeadlineExpiry:
+    def test_queued_request_shed_before_any_prefill(self):
+        reg = MetricsRegistry()
+        sched = _sched(max_running=1, registry=reg)
+        sched.submit(_req(0, [1] * 8, max_new=50), arrival=0.0)
+        sched.submit(_req(1, [2, 3, 4], deadline_s=1.0), arrival=0.0)
+        plan = sched.step(now=0.0)
+        assert not plan.expired
+        plan = sched.step(now=2.0)      # budget gone while queued
+        assert [s.uid for s in plan.expired] == [1]
+        assert not sched.waiting
+        assert reg.get("scheduler.expired").value() == 1
+
+    def test_expiry_mid_prefill_chunk_drains_pool(self):
+        pool = _pool()
+        free0 = pool.n_free()
+        sched = _sched(pool, max_running=1, prefill_chunk=2)
+        seq = sched.submit(_req(0, [1, 2, 3, 4, 5, 6, 7, 8],
+                                deadline_s=5.0), arrival=0.0)
+        plan = sched.step(now=0.0)
+        assert plan.prefills == [seq] and sched.chunk_for(seq) == 2
+        seq.n_prefilled += 2            # engine ran one chunk
+        plan = sched.step(now=1.0)      # still mid-prefill
+        assert plan.prefills == [seq] and seq.is_prefilling
+        seq.n_prefilled += 2
+        plan = sched.step(now=6.0)      # budget gone mid-prompt
+        assert plan.expired == [seq] and seq.slot == -1
+        assert not sched.running and not sched.waiting
+        assert pool.n_free() == free0   # partial prompt fully released
+
+    def test_expiry_mid_decode_frees_slot_and_pages(self):
+        pool = _pool()
+        free0 = pool.n_free()
+        sched = _sched(pool, max_running=1)
+        seq = sched.submit(_req(0, [1, 2, 3, 4], deadline_s=2.0,
+                                max_new=50), arrival=0.0)
+        sched.step(now=0.0)
+        seq.n_prefilled = seq.prefill_target    # prefill done
+        seq.generated.append(7)                 # one decoded token
+        plan = sched.step(now=1.0)
+        assert plan.decodes == [seq]
+        plan = sched.step(now=3.0)
+        assert plan.expired == [seq]
+        assert sched._free_slots and not sched.running
+        assert pool.n_free() == free0
+
+    def test_expiry_with_queued_cow_copy_drops_it(self):
+        # a mid-page prefix divergence queues a pending CoW copy at
+        # admission; shedding the sequence before the engine drains the
+        # copy must drop it with the pages — no dangling copy into a
+        # freed page
+        pool = _pool(page_size=4)
+        sched = _sched(pool, max_running=1)
+        a = sched.submit(_req(0, [1, 2, 3, 4, 5, 6, 7, 8]), arrival=0.0)
+        sched.step(now=0.0)
+        a.n_prefilled = a.prefill_target
+        pool.register_prefix(a.uid, a.request.prompt)
+        sched.cancel(a)                 # pages retire to the retained LRU
+        free0 = pool.n_free()
+
+        # same two leading blocks, divergence INSIDE the second one ->
+        # match = full page + cow_src on the partial tail
+        sched.submit(_req(1, [1, 2, 3, 4, 5, 6, 9, 9], deadline_s=1.0),
+                     arrival=0.0)
+        sched.step(now=0.0)
+        assert pool.pending_copies      # CoW clone of the partial page
+        plan = sched.step(now=2.0)
+        assert [s.uid for s in plan.expired] == [1]
+        assert pool.pending_copies == []
+        assert pool.n_free() == free0
+
+    def test_expiry_holding_shared_prefix_pages(self):
+        # the expired sequence only drops ITS references: the survivor
+        # sharing the prefix keeps its pages
+        pool = _pool(page_size=4)
+        sched = _sched(pool, max_running=2)
+        # 5-token prompt: a's decode writes land in its private second
+        # page, so the shared full page is never CoW-cloned from under
+        # this test's refcount assertions
+        a = sched.submit(_req(0, [1, 2, 3, 4, 5], max_new=50),
+                         arrival=0.0)
+        sched.step(now=0.0)
+        a.n_prefilled = a.prefill_target
+        pool.register_prefix(a.uid, a.request.prompt)
+        b = sched.submit(_req(1, [1, 2, 3, 4, 9, 9], deadline_s=1.0),
+                         arrival=0.0)
+        sched.step(now=0.0)
+        shared = pool.block_table(a.uid)[0]
+        assert shared in pool.block_table(b.uid)
+        assert pool.refcount(shared) == 2
+        plan = sched.step(now=2.0)
+        assert plan.expired == [b]
+        assert pool.refcount(shared) == 1       # a's reference survives
+        assert a.slot >= 0 and sched.running    # a untouched
+        assert sched.cancel(a)                  # and still tears down clean
+
+    def test_no_deadlines_means_no_expiry_scan(self):
+        sched = _sched()
+        sched.submit(_req(0, [1, 2, 3]), arrival=0.0)
+        assert not sched._has_deadlines
+        plan = sched.step(now=1e9)
+        assert not plan.expired and sched.running
+
+
+# ----------------------------------------------------------------------
+# engine core + async engine
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=259, dtype=jnp.float32)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+class TestEngineDeadlines:
+    def test_step_reports_expired_and_counts(self, tiny):
+        model, params = tiny
+        core = EngineCore(model, params, max_len=32, max_running=2,
+                          page_size=4, clock=VirtualClock())
+        core.submit(_req(0, [1, 2, 3], deadline_s=0.5, max_new=3),
+                    arrival=0.0)
+        core.submit(_req(1, [4, 5, 6], max_new=3), arrival=0.0)
+        expired, finished = [], []
+        now = 1.0                       # past uid 0's budget already
+        while core.has_work():
+            res = core.step(now=now)
+            expired += res.expired
+            finished += res.finished
+            now += 0.01
+        assert expired == [0]
+        assert [c.uid for c in finished] == [1]
+        assert core.registry.get("scheduler.expired").value() == 1
+
+    def test_uniform_priority_token_parity(self, tiny):
+        # marking everything batch must not change one sampled token
+        model, params = tiny
+
+        def run(priority):
+            core = EngineCore(model, params, max_len=48, max_running=2,
+                              page_size=4, clock=VirtualClock())
+            for uid, p in enumerate(([1, 2, 3, 4, 5], [7, 8, 9],
+                                     [9, 9, 2, 1])):
+                core.submit(_req(uid, p, priority=priority, max_new=5))
+            out = {}
+            while core.has_work():
+                for c in core.step().finished:
+                    out[c.uid] = list(c.tokens)
+            return out
+
+        assert run("interactive") == run("batch")
+
+    @pytest.mark.slow
+    def test_async_handle_fails_with_deadline_cause(self, tiny):
+        model, params = tiny
+        eng = AsyncEngine(model, params, max_len=32, max_running=2,
+                          page_size=4)
+        try:
+            h = eng.submit(_req(0, [1, 2, 3], deadline_s=1e-9,
+                                max_new=8))
+            t0 = time.time()
+            while not h.done and time.time() - t0 < 10:
+                time.sleep(0.005)
+            assert h.state is RequestState.FAILED
+            assert isinstance(h.error, DeadlineExceededError)
+            with pytest.raises(Exception) as ei:
+                eng.result(h, timeout=1)
+            assert isinstance(ei.value.__cause__, DeadlineExceededError)
+        finally:
+            eng.shutdown()
+
+
+# ----------------------------------------------------------------------
+# HTTP edge: bounded admission + SLO field propagation
+# ----------------------------------------------------------------------
+class TestHttpOverload:
+    def _fe(self, backend, **kw):
+        from repro.serving.http import HttpFrontend
+        return HttpFrontend(backend, **kw).start()
+
+    def test_inflight_cap_sheds_with_429(self):
+        from test_http_serving import FakeBackend, _post
+
+        fe = self._fe(FakeBackend(), max_inflight=1, retry_after_s=2.5)
+        try:
+            assert fe._admit()          # occupy the only slot
+            conn, resp = _post(fe, {"prompt": [1, 2], "max_tokens": 1})
+            assert resp.status == 429
+            assert resp.getheader("Retry-After") == "2.5"
+            doc = json.loads(resp.read())
+            assert doc["error"]["type"] == "Overloaded"
+            assert doc["error"]["retryable"] is True
+            conn.close()
+            fe._release()
+            conn, resp = _post(fe, {"prompt": [1, 2], "max_tokens": 1})
+            assert resp.status == 200   # slot free again -> serves
+            conn.close()
+            assert fe.registry.get("http.shed").value() == 1
+        finally:
+            fe.close()
+
+    def test_queue_depth_cap_sheds(self):
+        from test_http_serving import FakeBackend, _post
+
+        backend = FakeBackend()
+        g = backend.registry.gauge("scheduler.queue_depth", "t").labels()
+        g.set(3.0)                      # scheduler already backed up
+        fe = self._fe(backend, max_queue_depth=3)
+        try:
+            conn, resp = _post(fe, {"prompt": [1, 2], "max_tokens": 1})
+            assert resp.status == 429
+            conn.close()
+            g.set(0.0)
+            conn, resp = _post(fe, {"prompt": [1, 2], "max_tokens": 1})
+            assert resp.status == 200
+            conn.close()
+        finally:
+            fe.close()
+
+    def test_slo_fields_reach_the_backend_request(self):
+        from test_http_serving import FakeBackend, _post
+
+        class Recording(FakeBackend):
+            def submit(self, request, *, on_token=None):
+                self.seen = request
+                return super().submit(request, on_token=on_token)
+
+        backend = Recording()
+        fe = self._fe(backend)
+        try:
+            conn, resp = _post(fe, {"prompt": [1, 2, 3], "max_tokens": 2,
+                                    "priority": "batch",
+                                    "deadline_ms": 250.0})
+            assert resp.status == 200
+            conn.close()
+        finally:
+            fe.close()
+        assert backend.seen.priority == "batch"
+        assert backend.seen.deadline_s == pytest.approx(0.25)
+
+    def test_slo_headers_apply_when_body_is_silent(self):
+        import http.client
+
+        from test_http_serving import FakeBackend
+
+        class Recording(FakeBackend):
+            def submit(self, request, *, on_token=None):
+                self.seen = request
+                return super().submit(request, on_token=on_token)
+
+        backend = Recording()
+        fe = self._fe(backend)
+        try:
+            conn = http.client.HTTPConnection(fe.host, fe.port, timeout=5)
+            conn.request("POST", "/v1/completions",
+                         json.dumps({"prompt": [1, 2], "max_tokens": 1}),
+                         {"Content-Type": "application/json",
+                          "X-Priority": "batch",
+                          "X-Deadline-Ms": "500"})
+            assert conn.getresponse().status == 200
+            conn.close()
+        finally:
+            fe.close()
+        assert backend.seen.priority == "batch"
+        assert backend.seen.deadline_s == pytest.approx(0.5)
+
+    def test_bad_slo_fields_are_400(self):
+        from test_http_serving import FakeBackend, _post
+
+        fe = self._fe(FakeBackend())
+        try:
+            for body in ({"prompt": [1], "priority": "bulk"},
+                         {"prompt": [1], "deadline_ms": 0},
+                         {"prompt": [1], "deadline_ms": -5}):
+                conn, resp = _post(fe, body)
+                assert resp.status == 400
+                doc = json.loads(resp.read())
+                assert doc["error"]["retryable"] is False
+                conn.close()
+        finally:
+            fe.close()
+
+    def test_error_payload_retryability(self):
+        from repro.serving.http import (BadRequest, Overloaded,
+                                        error_payload)
+
+        assert error_payload(Overloaded("x"))["error"]["retryable"]
+        assert not error_payload(BadRequest("x"))["error"]["retryable"]
+        wrapped = RuntimeError("boom")
+        wrapped.__cause__ = DeadlineExceededError("late")
+        assert not error_payload(wrapped)["error"]["retryable"]
+        assert error_payload(TimeoutError("slow"))["error"]["retryable"]
+
+
+# ----------------------------------------------------------------------
+# router: circuit breaker + deadline-aware retry budget
+# ----------------------------------------------------------------------
+KEYED = list(range(1, 33))
+
+
+class LossyWorker:
+    """Streams one token short of what its done frame reports — the
+    router's lossy-stream check fails the request and records a
+    worker-attributable failure.  ``heal()`` makes it honest again."""
+
+    def __init__(self):
+        self.lossy = True
+        self.probed = 0
+
+    def alive(self):
+        return True
+
+    def describe(self):
+        return "lossy"
+
+    def healthy(self, *, timeout=2.0):
+        self.probed += 1
+        return True
+
+    def stream_completion(self, body, *, timeout):
+        sent = 0
+        for t in (21, 22, 23)[:int(body["max_tokens"])]:
+            if self.lossy and sent >= 1:
+                break                   # silently drop the tail
+            sent += 1
+            yield {"index": 0, "text": "", "token": t}
+        yield {"done": {"prompt_tokens": len(body["prompt"]),
+                        "completion_tokens": int(body["max_tokens"]),
+                        "finish_reason": "length"}}
+
+
+class SlowDeathWorker:
+    def __init__(self, delay=0.1):
+        self.delay = delay
+        self.bodies = []
+
+    def alive(self):
+        return False
+
+    def describe(self):
+        return "slow-death"
+
+    def stream_completion(self, body, *, timeout):
+        self.bodies.append(dict(body))
+        time.sleep(self.delay)
+        raise WorkerDiedError("injected slow death")
+        yield  # pragma: no cover — makes this a generator
+
+
+class TestRouterBreaker:
+    def test_breaker_opens_on_lossy_stream_and_probes_back(self):
+        w = LossyWorker()
+        r = Router({0: w}, page_size=16, breaker_threshold=1,
+                   breaker_probation_s=0.05)
+        with pytest.raises(RouterError) as ei:
+            r.result(r.submit(_req(0, KEYED, max_new=3)), timeout=5)
+        assert "frames arrived" in str(ei.value.__cause__)
+        assert r.registry.get("router.breaker_open").value() == 1
+        assert r.health()["replicas"]["0"]["breaker_open"]
+        assert r.health()["live"] == 0
+
+        # breaker open, probation not elapsed: nothing to serve with
+        with pytest.raises(RouterError) as ei:
+            r.result(r.submit(_req(0, KEYED, max_new=3)), timeout=5)
+        assert "breaker-open" in str(ei.value.__cause__)
+
+        w.lossy = False                 # the replica "heals"
+        time.sleep(0.06)                # probation elapses
+        comp = r.result(r.submit(_req(0, KEYED, max_new=3)), timeout=5)
+        assert comp.tokens == [21, 22, 23]
+        assert w.probed >= 1
+        assert r.registry.get("router.breaker_probes").value() >= 1
+        assert r.registry.get("router.breaker_closed").value() == 1
+        assert not r.health()["replicas"]["0"]["breaker_open"]
+        r.shutdown()
+
+    def test_success_resets_the_failure_streak(self):
+        w = LossyWorker()
+        r = Router({0: w}, page_size=16, breaker_threshold=2,
+                   breaker_probation_s=10.0)
+        with pytest.raises(RouterError):
+            r.result(r.submit(_req(0, KEYED, max_new=3)), timeout=5)
+        w.lossy = False                 # one good request in between
+        r.result(r.submit(_req(0, KEYED, max_new=3)), timeout=5)
+        w.lossy = True
+        with pytest.raises(RouterError):
+            r.result(r.submit(_req(0, KEYED, max_new=3)), timeout=5)
+        # two failures total, but never two CONSECUTIVE ones
+        assert r.registry.get("router.breaker_open").value() == 0
+        r.shutdown()
+
+    def test_breaker_threshold_validated(self):
+        with pytest.raises(ValueError, match="breaker_threshold"):
+            Router({0: LossyWorker()}, page_size=16, breaker_threshold=0)
+
+
+class TestRouterDeadlines:
+    def test_slo_fields_ride_the_wire(self):
+        from test_router import FakeWorker
+
+        w = FakeWorker([5, 6, 7])
+        r = Router({0: w}, page_size=16)
+        r.result(r.submit(_req(0, KEYED, priority="batch",
+                               deadline_s=5.0, max_new=3)), timeout=5)
+        body = w.bodies[0]
+        assert body["priority"] == "batch"
+        assert 0 < body["deadline_ms"] <= 5000.0
+        r.result(r.submit(_req(0, KEYED, max_new=3)), timeout=5)
+        assert "priority" not in w.bodies[1]        # defaults stay off
+        assert "deadline_ms" not in w.bodies[1]     # the wire
+        r.shutdown()
+
+    def test_spent_budget_fails_before_dispatch(self):
+        from test_router import FakeWorker
+
+        w = FakeWorker()
+        r = Router({0: w}, page_size=16)
+        h = r.submit(_req(0, KEYED, deadline_s=1e-9, max_new=3))
+        with pytest.raises(RouterError) as ei:
+            r.result(h, timeout=5)
+        assert isinstance(ei.value.__cause__, DeadlineExceededError)
+        assert w.bodies == []           # never even dispatched
+        r.shutdown()
+
+    def test_no_retry_after_the_budget_is_spent(self):
+        from test_router import FakeWorker
+
+        from repro.serving.kv_pool import prefix_chain_key
+        from repro.serving.router import AffinityRing
+
+        first = AffinityRing([0, 1]).pick(
+            prefix_chain_key(KEYED, 16, max_blocks=2))
+        slow = SlowDeathWorker(delay=0.15)
+        workers = {first: slow, 1 - first: FakeWorker([9, 9, 9])}
+        r = Router(workers, page_size=16, max_retries=3)
+        h = r.submit(_req(0, KEYED, deadline_s=0.05, max_new=3))
+        with pytest.raises(RouterError):
+            r.result(h, timeout=5)
+        # a survivor existed and retries remained, but the budget was
+        # spent — the router must not burn a second attempt
+        assert h.n_retries == 0
+        assert 0 < slow.bodies[0]["deadline_ms"] <= 50.0
+        r.shutdown()
+
+
+# ----------------------------------------------------------------------
+# spec-decode acceptance auto-off (satellite)
+# ----------------------------------------------------------------------
+class TestSpecAutoOff:
+    def _seq(self):
+        from repro.serving.scheduler import Sequence
+        return Sequence(request=_req(0, [1, 2, 3, 4], max_new=50))
+
+    def test_collapsed_acceptance_trips_once(self):
+        seq = self._seq()
+        fired = [note_accept(seq, 0, 3) for _ in range(4)]
+        assert fired == [False, False, False, True]
+        assert seq.spec_disabled
+        assert not note_accept(seq, 3, 3)       # latched: never re-fires
+        seq.n_prefilled = seq.prefill_target = 4
+        assert lookahead_for(seq, 3, max_len=64) == 0
+
+    def test_healthy_acceptance_stays_enabled(self):
+        seq = self._seq()
+        assert not any(note_accept(seq, 3, 3) for _ in range(8))
+        assert not seq.spec_disabled
+        seq.n_prefilled = seq.prefill_target = 4
+        assert lookahead_for(seq, 3, max_len=64) == 3
+
+    def test_window_is_sliding(self):
+        seq = self._seq()
+        for _ in range(6):                      # old good steps age out
+            note_accept(seq, 3, 3)
+        fired = [note_accept(seq, 0, 3) for _ in range(4)]
+        assert fired[-1] and seq.spec_disabled

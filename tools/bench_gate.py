@@ -1,10 +1,10 @@
 """Bench-regression gate (``tools/check.sh --bench``).
 
 Runs the key ``benchmarks/serving_bench.py`` sections, writes
-``BENCH_PR9.json`` at the repo root, and compares the tracked metrics
+``BENCH_PR10.json`` at the repo root, and compares the tracked metrics
 against a baseline read *before* the write: the committed/previous
-``BENCH_PR9.json`` itself when present, else the newest other
-``BENCH_*.json`` (e.g. the PR 8 baseline).  Any metric that regresses
+``BENCH_PR10.json`` itself when present, else the newest other
+``BENCH_*.json`` (e.g. the PR 9 baseline).  Any metric that regresses
 more than the threshold (default 20%, knob: ``BENCH_REGRESSION_PCT``
 env var or ``--threshold``) fails the gate with a nonzero exit.
 
@@ -55,6 +55,11 @@ Tracked metrics (direction-aware):
                           (^) — the drafter+model pairing must keep
                           accepting; a rate collapse silently turns
                           speculation into pure overhead
+  slo_goodput             serving_slo protected/unprotected goodput
+                          ratio at saturation (^) — SLO-aware
+                          protection (priority admission + deadline
+                          shedding) must keep beating the unprotected
+                          run on tokens-inside-window per second
 
 A metric present in the current run but NOT in the baseline (a freshly
 landed bench, e.g. the first ``serving_tp.*`` run) is reported as
@@ -64,7 +69,7 @@ next baseline.  Metrics that vanished from the current run are
 reported as ``dropped`` the same way.
 
 Usage:
-  python tools/bench_gate.py run [--out BENCH_PR9.json] [--threshold 20]
+  python tools/bench_gate.py run [--out BENCH_PR10.json] [--threshold 20]
   python tools/bench_gate.py compare CURRENT.json BASELINE.json \
       [--threshold 20]
 
@@ -104,6 +109,7 @@ METRICS: Dict[str, Tuple[str, str]] = {
     "spec_decode_tok_per_s": ("serving_spec.decode_toks_per_s.k4",
                               "higher"),
     "spec_accept_rate": ("serving_spec.accept_rate", "higher"),
+    "slo_goodput": ("serving_slo.goodput_ratio", "higher"),
 }
 
 
@@ -125,6 +131,7 @@ def collect() -> Dict[str, object]:
     rows += serving_bench.serving_http_rows()
     rows += serving_bench.serving_quant_rows()
     rows += serving_bench.serving_spec_rows()
+    rows += serving_bench.serving_slo_rows()
     by_name = {name: derived for name, _us, derived in rows}
 
     metrics = {}
@@ -217,7 +224,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
     run_p = sub.add_parser("run", help="run benches, write + compare")
-    run_p.add_argument("--out", default="BENCH_PR9.json")
+    run_p.add_argument("--out", default="BENCH_PR10.json")
     run_p.add_argument("--threshold", type=float, default=None,
                        help="regression threshold in percent")
     cmp_p = sub.add_parser("compare", help="compare two reports")

@@ -10,13 +10,18 @@
 #                             # drivers + a live HTTP front door with
 #                             # 2 engine-worker replicas (streamed
 #                             # completion, /healthz, /metrics,
-#                             # /metrics.json via repro.obs.validate)
+#                             # /metrics.json via repro.obs.validate),
+#                             # then a chaos lane: REPRO_FAULTS-injected
+#                             # worker latency, an overload burst that
+#                             # must shed (429 + Retry-After), and a
+#                             # SIGKILLed worker the fleet must survive
+#                             # (breaker opens, requests fail over)
 #   tools/check.sh --docs     # doc-link check only (<1 s)
 #   tools/check.sh --lint     # ruff check + format check (skips with a
 #                             # warning when ruff is not installed)
 #   tools/check.sh --bench    # bench-regression gate: runs the key
 #                             # serving_bench sections, writes
-#                             # BENCH_PR9.json, fails on a >20%
+#                             # BENCH_PR10.json, fails on a >20%
 #                             # regression vs the newest BENCH_*.json
 #                             # (knob: BENCH_REGRESSION_PCT=<percent>)
 set -euo pipefail
@@ -192,4 +197,93 @@ python -m repro.obs.validate --metrics "$OBS_TMP/http_metrics.json" \
     --require-counter router.requests:replica
 kill -TERM "$SERVE_PID"
 wait "$SERVE_PID"
+echo "== serving smoke: chaos lane (injected faults + SIGKILL) =="
+# two replicas under injected 30ms/step worker latency, a 1-deep
+# admission gate so a burst must shed, and a hair-trigger breaker so
+# one worker SIGKILL opens it; the fleet must keep serving throughout
+REPRO_FAULTS="step.latency_ms=30" \
+python -m repro.launch.serve --arch tiny --engine async --http \
+    --replicas 2 --port 0 --port-file "$OBS_TMP/chaos.port" \
+    --breaker-threshold 1 --max-inflight 1 &
+CHAOS_PID=$!
+for _ in $(seq 1 600); do
+    [[ -s "$OBS_TMP/chaos.port" ]] && break
+    if ! kill -0 "$CHAOS_PID" 2>/dev/null; then
+        echo "smoke: chaos serve exited before listening"
+        exit 1
+    fi
+    sleep 0.5
+done
+[[ -s "$OBS_TMP/chaos.port" ]] || { echo "smoke: no chaos port"; exit 1; }
+CHAOS_WORKER=$(pgrep -P "$CHAOS_PID" -f "repro.serving.worker" | head -1)
+[[ -n "$CHAOS_WORKER" ]] || { echo "smoke: no worker to kill"; exit 1; }
+python - "$(cat "$OBS_TMP/chaos.port")" "$CHAOS_WORKER" \
+    "$OBS_TMP/chaos_metrics.json" <<'PY'
+import json
+import os
+import signal
+import sys
+import threading
+import urllib.error
+import urllib.request
+
+port, victim, out = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+base = f"http://127.0.0.1:{port}"
+
+
+def post(prompt, timeout=300):
+    """Blocked completion; returns (status, headers, body-dict)."""
+    body = json.dumps({"prompt": prompt, "max_tokens": 4}).encode()
+    req = urllib.request.Request(
+        base + "/v1/completions", data=body,
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, dict(resp.headers), json.load(resp)
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), json.loads(e.read() or b"{}")
+
+
+# 1. overload burst: 6 concurrent against a 1-deep gate under 30ms/step
+#    injected latency — the extras must shed as 429 + Retry-After with
+#    a structured, retryable error body
+results = []
+lock = threading.Lock()
+
+
+def worker(i):
+    r = post(list(range(1 + i, 30 + i)))
+    with lock:
+        results.append(r)
+
+
+threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+[t.start() for t in threads]
+[t.join() for t in threads]
+sheds = [(h, b) for s, h, b in results if s == 429]
+assert any(s == 200 for s, _h, _b in results), results
+assert sheds, "smoke: 6-burst against --max-inflight 1 never shed"
+for h, b in sheds:
+    assert h.get("Retry-After"), f"smoke: 429 without Retry-After: {h}"
+    err = b.get("error", {})
+    assert err.get("type") == "Overloaded" and err.get("retryable"), b
+print(f"smoke: chaos burst shed {len(sheds)}/6 with Retry-After")
+
+# 2. SIGKILL one worker, then keep serving: the router must open the
+#    breaker on the corpse and fail over — every request still succeeds
+os.kill(victim, signal.SIGKILL)
+for i in range(12):
+    s, _h, b = post(list(range(40 + 3 * i, 70 + 3 * i)))
+    assert s == 200, f"smoke: post-kill request {i} failed: {s} {b}"
+    assert len(b["choices"][0]["tokens"]) == 4, b
+print("smoke: 12/12 completions served across a SIGKILLed worker")
+
+with urllib.request.urlopen(base + "/metrics.json", timeout=30) as r:
+    open(out, "wb").write(r.read())
+PY
+python -m repro.obs.validate --metrics "$OBS_TMP/chaos_metrics.json" \
+    --require-counter http.shed \
+    --require-counter router.breaker_open
+kill -TERM "$CHAOS_PID"
+wait "$CHAOS_PID" || true
 echo "check.sh: OK"
